@@ -1,0 +1,55 @@
+//! Numerical study: regenerate the paper's Fig. 1(a)–(d) series at a
+//! CI-friendly scale and check the qualitative claims hold:
+//!
+//! * (a) satisfaction rises with the requested-delay budget;
+//! * (b) satisfaction falls as requested accuracy rises;
+//! * (c) satisfaction falls as offered load rises;
+//! * (d) satisfaction falls as queue delay rises;
+//! * GUS dominates the naive baselines everywhere.
+//!
+//! Run with: `cargo run --release --example numerical_study [--runs N]`
+//! (full-scale regeneration: `cargo bench --bench fig1_numerical` or
+//! `edgeus figure --id fig1a --runs 2000`).
+
+use edgeus::figures::{run_numerical, NumericalConfig, NumericalFigure};
+use edgeus::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(false);
+    let mut cfg = NumericalConfig::default();
+    cfg.runs = args.get_usize("runs", 60);
+    cfg.seed = args.get_u64("seed", 7);
+
+    for figure in [
+        NumericalFigure::Fig1a,
+        NumericalFigure::Fig1b,
+        NumericalFigure::Fig1c,
+        NumericalFigure::Fig1d,
+    ] {
+        eprintln!("running {} ({} MC runs per point)...", figure.id(), cfg.runs);
+        let series = run_numerical(figure, &cfg);
+        println!("\n# {} — satisfied users (%) vs {}\n", figure.id(), series.x_label);
+        println!("{}", series.to_markdown());
+
+        // Qualitative checks (the paper's claims).
+        let gus = &series.policies.iter().find(|(n, _, _)| n == "gus").unwrap().1;
+        let first = gus.first().copied().unwrap_or(0.0);
+        let last = gus.last().copied().unwrap_or(0.0);
+        let trend_ok = match figure {
+            NumericalFigure::Fig1a => last > first,
+            _ => last < first,
+        };
+        println!(
+            "trend check ({}): GUS goes {:.1}% -> {:.1}% … {}",
+            figure.id(),
+            first,
+            last,
+            if trend_ok { "matches the paper ✓" } else { "DOES NOT match ✗" }
+        );
+        for baseline in ["random", "offload-all", "local-all"] {
+            let b = &series.policies.iter().find(|(n, _, _)| n == baseline).unwrap().1;
+            let wins = gus.iter().zip(b.iter()).filter(|(g, b)| g >= b).count();
+            println!("  GUS ≥ {baseline} on {wins}/{} sweep points", gus.len());
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Quickstart: the five-minute tour of the edgeus public API.
+//!
+//! 1. Build a paper-default MUS instance (9 edge servers + 1 cloud,
+//!    100 requests, 100 services × 10 model tiers).
+//! 2. Schedule it with GUS and with every baseline; compare satisfaction.
+//! 3. Validate the GUS schedule against the full ILP constraint set.
+//! 4. If `artifacts/` is built, run one real EdgeNet inference through
+//!    the PJRT runtime.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use edgeus::coordinator::us::{validate_schedule, ConstraintMode};
+use edgeus::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // ----- 1. a problem instance ---------------------------------------
+    let mut rng = Rng::new(42);
+    let scenario = ScenarioParams::default();
+    let inst = build_instance(&scenario, &mut rng);
+    println!(
+        "instance: {} requests, {} servers ({} edge + {} cloud), {} services x {} tiers",
+        inst.num_requests(),
+        inst.num_servers(),
+        inst.topology.edge_ids().len(),
+        inst.topology.cloud_ids().len(),
+        inst.catalog.num_services,
+        inst.catalog.num_tiers,
+    );
+
+    // ----- 2. schedule with every policy --------------------------------
+    println!("\n| policy | satisfied % | served % | objective | mix local/cloud/peer/drop |");
+    println!("|---|---|---|---|---|");
+    for sched in all_schedulers() {
+        let schedule = sched.schedule(&inst, &mut rng.fork(1));
+        let mix = schedule.decision_mix_pct(&inst);
+        println!(
+            "| {} | {:.1} | {:.1} | {:.4} | {:.0}/{:.0}/{:.0}/{:.0} |",
+            sched.name(),
+            schedule.satisfied_pct(&inst),
+            100.0 * schedule.served() as f64 / inst.num_requests() as f64,
+            schedule.objective(),
+            mix[0],
+            mix[1],
+            mix[2],
+            mix[3],
+        );
+    }
+
+    // ----- 3. validate the GUS schedule ---------------------------------
+    let gus = Gus::default().schedule(&inst, &mut rng.fork(2));
+    validate_schedule(&inst, &gus, ConstraintMode::STRICT)
+        .map_err(|e| anyhow::anyhow!("GUS schedule violates the ILP constraints: {e}"))?;
+    println!("\nGUS schedule validated against constraints (2a)-(2f) ✓");
+
+    // ----- 4. real inference through PJRT (optional) ---------------------
+    match edgeus::runtime::InferenceEngine::load_filtered("artifacts", |a| {
+        a.tier == "tiny" && a.batch == 1
+    }) {
+        Ok(engine) => {
+            let images = vec![0.5f32; 32 * 32 * 3];
+            let result = engine.infer_tier("tiny", 1, &images)?;
+            println!(
+                "real EdgeNet-tiny inference on {}: class={} in {:.2} ms",
+                engine.platform(),
+                result.predictions()[0],
+                result.execute_ms
+            );
+        }
+        Err(_) => {
+            println!("(skip PJRT demo — run `make artifacts` first)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT compile path: lower EdgeNet tiers to HLO text for the rust runtime.
+
+Run once at build time (``make artifacts``); Python is never on the request
+path. Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs, under ``artifacts/``:
+  * ``edgenet_{tier}_b{batch}.hlo.txt`` — one self-contained module per
+    (tier, batch); parameters are baked in as constants so the rust side
+    feeds ``f32[batch,32,32,3]`` images only and reads ``f32[batch,10]``
+    logits (wrapped in a 1-tuple: lowered with ``return_tuple=True``).
+  * ``manifest.json`` — inventory consumed by ``rust/src/runtime``:
+    input/output shapes, tier profiles (accuracy %, params, FLOPs), and
+    the L1 kernel's VMEM-footprint / MXU-utilization estimates for the
+    DESIGN.md §Perf bookkeeping.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+from compile import model
+from compile.kernels import matmul
+
+DEFAULT_BATCHES = (1, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe route)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides big literals as
+    # `constant({...})`, which would silently destroy the baked-in params.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def lower_tier(tier: str, batch: int) -> str:
+    fn, spec = model.serving_fn(tier, batch)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def build(out_dir: str, tiers, batches, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "image_size": model.IMAGE_SIZE,
+        "image_channels": model.IMAGE_CHANNELS,
+        "num_classes": model.NUM_CLASSES,
+        "param_seed": model.PARAM_SEED,
+        "kernel": {
+            "name": "matmul_bias_act",
+            "block": [matmul.DEFAULT_BLOCK_M, matmul.DEFAULT_BLOCK_N, matmul.DEFAULT_BLOCK_K],
+            "vmem_footprint_bytes": matmul.vmem_footprint_bytes(),
+        },
+        "artifacts": [],
+    }
+    for tier in tiers:
+        spec = model.TIERS[tier]
+        for batch in batches:
+            name = f"edgenet_{tier}_b{batch}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            text = lower_tier(tier, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            entry = {
+                "name": name,
+                "tier": tier,
+                "batch": batch,
+                "file": os.path.basename(path),
+                "input_shape": [batch, model.IMAGE_SIZE, model.IMAGE_SIZE, model.IMAGE_CHANNELS],
+                "output_shape": [batch, model.NUM_CLASSES],
+                "profile_accuracy_pct": spec.profile_accuracy,
+                "params": model.param_count(tier),
+                "flops_per_image": model.flops_per_image(tier),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+            manifest["artifacts"].append(entry)
+            if verbose:
+                print(f"  wrote {path} ({len(text)/1e6:.2f} MB)", file=sys.stderr)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--tiers", default=",".join(model.TIERS), help="comma list")
+    ap.add_argument("--batches", default=",".join(map(str, DEFAULT_BATCHES)))
+    args = ap.parse_args()
+    tiers = [t for t in args.tiers.split(",") if t]
+    batches = [int(b) for b in args.batches.split(",") if b]
+    m = build(args.out, tiers, batches)
+    print(f"wrote {len(m['artifacts'])} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

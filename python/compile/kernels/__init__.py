@@ -1,0 +1,8 @@
+"""L1 — Pallas kernels for the paper's compute hot-spot (EdgeNet GEMMs)."""
+
+from compile.kernels.matmul import (  # noqa: F401
+    matmul_bias_act,
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref  # noqa: F401

@@ -1,0 +1,218 @@
+"""L1 — Pallas tiled GEMM with fused bias + activation epilogue.
+
+This is the compute hot-spot of every EdgeNet artifact: convolutions are
+lowered to im2col GEMMs and dense layers are plain GEMMs, so all FLOPs in
+the serving path flow through this kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * the (block_m, block_k) x (block_k, block_n) tile pair is sized for the
+    MXU systolic array (128-multiples) and must fit VMEM together with the
+    f32 accumulator tile;
+  * the grid is (M/bm, N/bn, K/bk) with K innermost, so each output tile
+    stays resident while K-panels stream HBM->VMEM (the BlockSpec index
+    maps express the schedule a CUDA kernel would do with threadblocks);
+  * accumulation is f32 regardless of input dtype; bias-add + activation
+    are fused into the final K step to avoid an extra HBM round-trip.
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO for both the pytest
+oracle checks and the AOT artifacts consumed by the rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size policy. `None` block arguments select VMEM-aware adaptive
+# tiles via `auto_blocks`: the largest MXU-aligned tiles that keep the
+# working set under the VMEM budget. Covering the whole K extent with one
+# panel (when it fits) removes the K-accumulation grid dimension, which
+# is both the TPU-optimal schedule for these EdgeNet shapes *and* the
+# dominant cost in interpret mode (each K step is a serialized
+# dynamic-update-slice round-trip; see EXPERIMENTS.md §Perf, L1
+# iteration 1: 10.5 ms → 0.34 ms on the 784×432×48 conv GEMM).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+# Budget for one grid step's VMEM working set (TPU cores have ~16 MiB;
+# leave headroom for double-buffered input streams).
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+MAX_BLOCK_M = 1024
+MAX_BLOCK_N = 128
+MAX_BLOCK_K = 4096
+
+
+def auto_blocks(m: int, k: int, n: int) -> tuple:
+    """Pick (block_m, block_n, block_k) for a GEMM of the given shape.
+
+    Preference order: (1) cover K with a single panel so the output tile
+    is written once (no accumulation revisits); (2) cover M; (3) keep N
+    tiles at the 128-lane MXU width; all subject to the VMEM budget.
+    """
+    ceil8 = lambda v: ((v + 7) // 8) * 8  # noqa: E731
+    bn = min(MAX_BLOCK_N, ceil8(n))
+    bk = min(MAX_BLOCK_K, ceil8(k))
+    bm = min(MAX_BLOCK_M, ceil8(m))
+    # Shrink block_m (keeping K whole) until the working set fits.
+    while bm > 128 and vmem_footprint_bytes(bm, bn, bk) > VMEM_BUDGET_BYTES:
+        bm //= 2
+    # If still over budget, fall back to shrinking K (re-enables the
+    # accumulation grid, but stays correct).
+    while bk > 128 and vmem_footprint_bytes(bm, bn, bk) > VMEM_BUDGET_BYTES:
+        bk //= 2
+    return bm, bn, bk
+
+_ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _apply_activation(x, activation: str):
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    return x
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, k_steps: int, activation: str):
+    """Grid = (m, n, k); K is innermost so o_ref acts as the accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_activation(out, activation)
+
+
+def _pad_to(x, multiple: int, axis: int):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "block_m", "block_n", "block_k"),
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+    block_m: Optional[int] = None,
+    block_n: Optional[int] = None,
+    block_k: Optional[int] = None,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Args:
+      x: ``(M, K)`` array, f32 or bf16.
+      w: ``(K, N)`` array, same dtype family as ``x``.
+      b: optional ``(N,)`` bias; zeros when omitted.
+      activation: one of ``none | relu | gelu`` (fused epilogue).
+      block_*: tile sizes; inputs are zero-padded up to tile multiples and
+        the result is sliced back, so ragged shapes are supported.
+
+    Returns:
+      ``(M, N)`` array in f32 (accumulation dtype).
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}, got {activation!r}")
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"x and w must be rank-2, got {x.shape} @ {w.shape}")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    if b is None:
+        b = jnp.zeros((n,), dtype=x.dtype)
+    if b.shape != (n,):
+        raise ValueError(f"bias must be ({n},), got {b.shape}")
+
+    auto_m, auto_n, auto_k = auto_blocks(m, k, n)
+    block_m = auto_m if block_m is None else block_m
+    block_n = auto_n if block_n is None else block_n
+    block_k = auto_k if block_k is None else block_k
+    # Clamp tiles to the (padded) problem so tiny shapes don't waste work.
+    block_m = min(block_m, _ceil_to(m, 8))
+    block_n = min(block_n, _ceil_to(n, 8))
+    block_k = min(block_k, _ceil_to(k, 8))
+
+    xp = _pad_to(_pad_to(x, block_m, 0), block_k, 1)
+    wp = _pad_to(_pad_to(w, block_k, 0), block_n, 1)
+    bp = _pad_to(b.reshape(1, n), block_n, 1)
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _ceil_to(v: int, multiple: int) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def vmem_footprint_bytes(
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    in_dtype_bytes: int = 4,
+) -> int:
+    """Static VMEM estimate for one grid step (used by DESIGN.md §Perf).
+
+    x-tile + w-tile (input dtype) + output/accumulator tile (f32) + bias
+    row, times 2 for double-buffered input streams.
+    """
+    tiles_in = (block_m * block_k + block_k * block_n) * in_dtype_bytes
+    acc = block_m * block_n * 4
+    bias = block_n * 4
+    return 2 * tiles_in + acc + bias
+
+
+def mxu_utilization_estimate(
+    m: int,
+    n: int,
+    k: int,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding) work."""
+    mp, np_, kp = (_ceil_to(m, block_m), _ceil_to(n, block_n), _ceil_to(k, block_k))
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued if issued else 0.0

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything in this module is deliberately boring: no tiling, no pallas, no
+custom control flow — just the textbook expression of each op. pytest
+compares the Pallas kernels against these under hypothesis-driven
+shape/dtype sweeps, and the L2 reference model is built exclusively from
+these functions so model-level tests have an independent numerics path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    activation: str = "none",
+) -> jax.Array:
+    """Reference ``act(x @ w + b)`` with f32 accumulation."""
+    out = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def im2col_ref(images: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """Extract (kh, kw) patches: ``(B,H,W,C) -> (B*OH*OW, kh*kw*C)``.
+
+    VALID padding; patch layout is (kh, kw, C) row-major, matching the
+    im2col used by the L2 model.
+    """
+    b, h, w, c = images.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = images[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :]
+            cols.append(patch.reshape(b, oh, ow, c))
+    stacked = jnp.stack(cols, axis=3)  # (B, OH, OW, kh*kw, C)
+    return stacked.reshape(b * oh * ow, kh * kw * c)
+
+
+def conv2d_ref(
+    images: jax.Array,
+    filters: jax.Array,
+    bias: Optional[jax.Array] = None,
+    *,
+    stride: int = 1,
+    activation: str = "none",
+) -> jax.Array:
+    """Reference VALID conv: ``(B,H,W,C) * (kh,kw,C,F) -> (B,OH,OW,F)``."""
+    kh, kw, c, f = filters.shape
+    b, h, w, _ = images.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = im2col_ref(images, kh, kw, stride)
+    flat = matmul_bias_act_ref(
+        cols, filters.reshape(kh * kw * c, f), bias, activation=activation
+    )
+    return flat.reshape(b, oh, ow, f)
+
+
+def avgpool2d_ref(x: jax.Array, window: int) -> jax.Array:
+    """Non-overlapping average pool over (B, H, W, C)."""
+    b, h, w, c = x.shape
+    oh, ow = h // window, w // window
+    x = x[:, : oh * window, : ow * window, :]
+    x = x.reshape(b, oh, window, ow, window, c)
+    return x.mean(axis=(2, 4))

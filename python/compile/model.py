@@ -1,0 +1,224 @@
+"""L2 — EdgeNet: the JAX model family served by the coordinator.
+
+The paper serves image-classification requests with |L| DL-model tiers per
+service, trading accuracy for latency (SqueezeNet on the edge, GoogleNet on
+the cloud). Pretrained ImageNet weights are not available offline, so we
+build **EdgeNet**, a CNN family whose tiers scale width/depth the same way
+(see DESIGN.md §Substitutions): the scheduler only consumes each tier's
+(accuracy, latency, cost) *profile*, while the serving path executes the
+real network below through PJRT.
+
+Every FLOP goes through the L1 Pallas kernel: convolutions are lowered to
+im2col GEMMs and dense layers are plain GEMMs, all via
+``kernels.matmul_bias_act``. A structurally independent reference forward
+pass built on ``kernels/ref.py`` backs the pytest oracle checks.
+
+Build-time only — lowered to HLO text by ``aot.py``; never imported at
+request time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import matmul, ref
+
+IMAGE_SIZE = 32
+IMAGE_CHANNELS = 3
+NUM_CLASSES = 10
+PARAM_SEED = 20200731  # fixed: artifacts bake params in as constants
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Architecture of one EdgeNet accuracy tier.
+
+    ``conv_widths`` is a list of stages; each stage is a list of 3x3 VALID
+    conv output widths followed by a 2x2 average pool. A dense trunk
+    (``dense_widths``) and the 10-way classifier head follow.
+    """
+
+    name: str
+    conv_stages: Tuple[Tuple[int, ...], ...]
+    dense_widths: Tuple[int, ...]
+    # Calibrated top-1 accuracy profile (%) exposed to the scheduler —
+    # spans the SqueezeNet-class .. GoogleNet-class spread the paper uses.
+    profile_accuracy: float
+
+
+# Tier ladder: monotone in parameters, FLOPs and profile accuracy. The
+# numerical experiments use |L|=10 synthetic tiers (rust side interpolates
+# profiles); these four are the tiers with *real* compiled artifacts.
+TIERS: Dict[str, TierSpec] = {
+    "tiny": TierSpec("tiny", ((8,), (16,)), (), 40.0),
+    "small": TierSpec("small", ((16,), (32,)), (64,), 52.0),
+    "base": TierSpec("base", ((32,), (64, 64)), (128,), 63.0),
+    "large": TierSpec("large", ((48, 48), (96, 96)), (256,), 71.0),
+}
+
+Params = Dict[str, jax.Array]
+
+
+def _glorot(key, shape):
+    fan_in = int(jnp.prod(jnp.asarray(shape[:-1])))
+    fan_out = shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _layer_shapes(spec: TierSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, weight-shape) list; biases are the trailing dim."""
+    shapes: List[Tuple[str, Tuple[int, ...]]] = []
+    h = IMAGE_SIZE
+    c = IMAGE_CHANNELS
+    for si, stage in enumerate(spec.conv_stages):
+        for ci, width in enumerate(stage):
+            shapes.append((f"conv{si}_{ci}", (3, 3, c, width)))
+            c = width
+            h = h - 2  # 3x3 VALID
+        h = h // 2  # 2x2 avg pool
+    flat = h * h * c
+    prev = flat
+    for di, width in enumerate(spec.dense_widths):
+        shapes.append((f"dense{di}", (prev, width)))
+        prev = width
+    shapes.append(("head", (prev, NUM_CLASSES)))
+    return shapes
+
+
+def init_params(tier: str, seed: int = PARAM_SEED) -> Params:
+    """Deterministic parameters for ``tier`` (baked into artifacts)."""
+    spec = TIERS[tier]
+    params: Params = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in _layer_shapes(spec):
+        key, wk = jax.random.split(key)
+        params[f"{name}_w"] = _glorot(wk, shape)
+        params[f"{name}_b"] = jnp.zeros((shape[-1],), dtype=jnp.float32)
+    return params
+
+
+def param_count(tier: str) -> int:
+    return sum(int(jnp.size(v)) for v in init_params(tier).values())
+
+
+def flops_per_image(tier: str) -> int:
+    """MAC-based FLOP estimate (2*MACs) for one forward pass."""
+    spec = TIERS[tier]
+    total = 0
+    h = IMAGE_SIZE
+    c = IMAGE_CHANNELS
+    for stage in spec.conv_stages:
+        for width in stage:
+            oh = h - 2
+            total += 2 * oh * oh * (3 * 3 * c) * width
+            h, c = oh, width
+        h = h // 2
+    prev = h * h * c
+    for width in list(spec.dense_widths) + [NUM_CLASSES]:
+        total += 2 * prev * width
+        prev = width
+    return total
+
+
+def _im2col(images: jax.Array, kh: int, kw: int, stride: int = 1) -> jax.Array:
+    """Patch extraction for the kernel path, (kh, kw, C) row-major.
+
+    Strided-slice construction: concatenate the kh*kw shifted views along
+    a new patch axis. This lowers to plain slices + one concatenate —
+    ~3.5x cheaper on the CPU backend than
+    ``lax.conv_general_dilated_patches`` (which materializes an identity
+    conv; see EXPERIMENTS.md §Perf, L2 iteration 2).
+    """
+    b, h, w, c = images.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    views = [
+        images[:, i : i + stride * oh : stride, j : j + stride * ow : stride, :].reshape(
+            b, oh, ow, 1, c
+        )
+        for i in range(kh)
+        for j in range(kw)
+    ]
+    stacked = jnp.concatenate(views, axis=3)  # (B, OH, OW, kh*kw, C)
+    return stacked.reshape(b * oh * ow, kh * kw * c)
+
+
+def _conv_block(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    kh, kw, c, f = w.shape
+    bsz, h, _, _ = x.shape
+    oh = h - kh + 1
+    cols = _im2col(x, kh, kw)
+    out = matmul.matmul_bias_act(cols, w.reshape(kh * kw * c, f), b, activation="relu")
+    return out.reshape(bsz, oh, oh, f)
+
+
+def _avgpool(x: jax.Array, window: int = 2) -> jax.Array:
+    b, h, w, c = x.shape
+    oh, ow = h // window, w // window
+    x = x[:, : oh * window, : ow * window, :]
+    return x.reshape(b, oh, window, ow, window, c).mean(axis=(2, 4))
+
+
+def forward(params: Params, images: jax.Array, tier: str) -> jax.Array:
+    """EdgeNet forward pass (Pallas-kernel path): images -> logits.
+
+    Args:
+      params: from :func:`init_params`.
+      images: ``(B, 32, 32, 3)`` f32 in [0, 1].
+      tier: key into :data:`TIERS`.
+    Returns:
+      ``(B, 10)`` f32 logits.
+    """
+    spec = TIERS[tier]
+    x = images
+    for si, stage in enumerate(spec.conv_stages):
+        for ci, _ in enumerate(stage):
+            x = _conv_block(x, params[f"conv{si}_{ci}_w"], params[f"conv{si}_{ci}_b"])
+        x = _avgpool(x)
+    x = x.reshape(x.shape[0], -1)
+    for di, _ in enumerate(spec.dense_widths):
+        x = matmul.matmul_bias_act(
+            x, params[f"dense{di}_w"], params[f"dense{di}_b"], activation="relu"
+        )
+    return matmul.matmul_bias_act(x, params["head_w"], params["head_b"])
+
+
+def forward_ref(params: Params, images: jax.Array, tier: str) -> jax.Array:
+    """Independent reference forward pass built purely on kernels/ref.py."""
+    spec = TIERS[tier]
+    x = images
+    for si, stage in enumerate(spec.conv_stages):
+        for ci, _ in enumerate(stage):
+            x = ref.conv2d_ref(
+                x,
+                params[f"conv{si}_{ci}_w"],
+                params[f"conv{si}_{ci}_b"],
+                activation="relu",
+            )
+        x = ref.avgpool2d_ref(x, 2)
+    x = x.reshape(x.shape[0], -1)
+    for di, _ in enumerate(spec.dense_widths):
+        x = ref.matmul_bias_act_ref(
+            x, params[f"dense{di}_w"], params[f"dense{di}_b"], activation="relu"
+        )
+    return ref.matmul_bias_act_ref(x, params["head_w"], params["head_b"])
+
+
+def serving_fn(tier: str, batch: int, seed: int = PARAM_SEED):
+    """Close params over the forward pass: the AOT entrypoint.
+
+    Returns a function of a single ``(batch, 32, 32, 3)`` input producing a
+    1-tuple ``(logits,)`` — params are constants in the lowered HLO so the
+    rust runtime feeds images only.
+    """
+    params = init_params(tier, seed)
+
+    def fn(images: jax.Array):
+        return (forward(params, images, tier),)
+
+    return fn, jax.ShapeDtypeStruct((batch, IMAGE_SIZE, IMAGE_SIZE, IMAGE_CHANNELS), jnp.float32)

@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes and dtypes; dedicated cases pin down the ragged
+edge tiles, block-size interactions, activations, and input validation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+def _check(x, w, b, activation, rtol=1e-5, atol=1e-5, **blocks):
+    got = matmul.matmul_bias_act(x, w, b, activation=activation, **blocks)
+    want = ref.matmul_bias_act_ref(x, w, b, activation=activation)
+    assert got.shape == want.shape
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- hypothesis
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    activation=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_f32(m, k, n, activation, seed):
+    x = _rand(seed, (m, k), jnp.float32)
+    w = _rand(seed + 1, (k, n), jnp.float32)
+    b = _rand(seed + 2, (n,), jnp.float32)
+    # Tiled K-accumulation reorders float adds vs the single-dot reference;
+    # tolerance scales with sqrt(K) (values are ~N(0,1)).
+    _check(x, w, b, activation, rtol=1e-4, atol=2e-5 * max(1.0, k) ** 0.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_bf16(m, k, n, seed):
+    x = _rand(seed, (m, k), jnp.bfloat16)
+    w = _rand(seed + 1, (k, n), jnp.bfloat16)
+    b = _rand(seed + 2, (n,), jnp.bfloat16)
+    # bf16 inputs, f32 accumulation: tolerance scales with K.
+    _check(x, w, b, "none", rtol=5e-2, atol=5e-2 * max(1, k) ** 0.5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    block_m=st.sampled_from([8, 16, 32, 128]),
+    block_n=st.sampled_from([8, 16, 32, 128]),
+    block_k=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_block_size_invariance(block_m, block_n, block_k, seed):
+    """Result must not depend on the tiling."""
+    x = _rand(seed, (70, 45), jnp.float32)
+    w = _rand(seed + 1, (45, 33), jnp.float32)
+    b = _rand(seed + 2, (33,), jnp.float32)
+    _check(x, w, b, "relu", block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+# ------------------------------------------------------------------ pinned
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1),            # degenerate
+    (128, 128, 128),      # exactly one tile
+    (129, 128, 128),      # one ragged row tile
+    (128, 129, 128),      # ragged K panel
+    (128, 128, 129),      # ragged col tile
+    (256, 384, 512),      # multi-tile, all aligned
+    (7, 900, 3),          # deep-K skinny
+    (900, 27, 8),         # conv-shaped (im2col of 32x32x3, 3x3, 8 filters)
+])
+def test_kernel_shape_cases(m, k, n):
+    x = _rand(0, (m, k), jnp.float32)
+    w = _rand(1, (k, n), jnp.float32)
+    b = _rand(2, (n,), jnp.float32)
+    _check(x, w, b, "relu", atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_no_bias_defaults_to_zero():
+    x = _rand(0, (17, 19), jnp.float32)
+    w = _rand(1, (19, 23), jnp.float32)
+    got = matmul.matmul_bias_act(x, w)
+    want = ref.matmul_bias_act_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_relu_clamps_negatives():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    out = matmul.matmul_bias_act(x, w, activation="relu")
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_kernel_zero_inputs_give_bias():
+    x = jnp.zeros((5, 7), jnp.float32)
+    w = jnp.ones((7, 3), jnp.float32)
+    b = jnp.asarray([1.0, -2.0, 3.0], jnp.float32)
+    out = matmul.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(np.asarray(out), np.tile([1.0, -2.0, 3.0], (5, 1)))
+
+
+def test_kernel_rejects_bad_activation():
+    x = jnp.zeros((2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="activation"):
+        matmul.matmul_bias_act(x, x, activation="tanh")
+
+
+def test_kernel_rejects_rank_mismatch():
+    with pytest.raises(ValueError, match="rank-2"):
+        matmul.matmul_bias_act(jnp.zeros((2, 2, 2)), jnp.zeros((2, 2)))
+
+
+def test_kernel_rejects_contraction_mismatch():
+    with pytest.raises(ValueError, match="contraction"):
+        matmul.matmul_bias_act(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+
+def test_kernel_rejects_bad_bias_shape():
+    with pytest.raises(ValueError, match="bias"):
+        matmul.matmul_bias_act(jnp.zeros((2, 3)), jnp.zeros((3, 4)), jnp.zeros((5,)))
+
+
+def test_kernel_deterministic():
+    x = _rand(0, (50, 60), jnp.float32)
+    w = _rand(1, (60, 40), jnp.float32)
+    a = matmul.matmul_bias_act(x, w)
+    b = matmul.matmul_bias_act(x, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- perf bookkeeping
+
+def test_vmem_footprint_within_tpu_budget():
+    # Default tiles must fit a TPU core's VMEM (~16 MiB) with headroom.
+    assert matmul.vmem_footprint_bytes() < 4 * 1024 * 1024
+
+
+def test_mxu_utilization_perfect_when_aligned():
+    assert matmul.mxu_utilization_estimate(256, 256, 256) == 1.0
+
+
+def test_mxu_utilization_penalizes_ragged():
+    u = matmul.mxu_utilization_estimate(129, 128, 128)
+    assert 0.4 < u < 0.6  # 129/256 of issued M-rows useful
+
+
+# ------------------------------------------------------- adaptive tiling
+
+def test_auto_blocks_prefers_whole_k():
+    bm, bn, bk = matmul.auto_blocks(784, 432, 48)
+    assert bk >= 432, "single K panel expected for small K"
+    assert bn == 48 or bn == 128
+    assert matmul.vmem_footprint_bytes(bm, bn, bk) <= matmul.VMEM_BUDGET_BYTES
+
+
+def test_auto_blocks_respects_vmem_budget():
+    for m, k, n in [(1, 1, 1), (10_000, 8192, 4096), (900, 27, 8), (128, 4096, 128)]:
+        bm, bn, bk = matmul.auto_blocks(m, k, n)
+        assert matmul.vmem_footprint_bytes(bm, bn, bk) <= matmul.VMEM_BUDGET_BYTES, (m, k, n)
+        assert bm >= 8 and bn >= 8 and bk >= 8
+
+
+def test_auto_blocks_n_capped_at_mxu_width():
+    _, bn, _ = matmul.auto_blocks(256, 256, 4096)
+    assert bn == matmul.MAX_BLOCK_N == 128
+
+
+def test_kernel_correct_with_auto_blocks_on_large_k():
+    # Shapes that exercise the shrink-K fallback path.
+    x = _rand(0, (64, 5000), jnp.float32)
+    w = _rand(1, (5000, 32), jnp.float32)
+    got = matmul.matmul_bias_act(x, w)
+    want = ref.matmul_bias_act_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=2e-2)
+
+
+def test_mxu_utilization_reasonable_for_edgenet_shapes():
+    # The §Perf claim: >= 0.78 useful-MAC fraction on EdgeNet GEMMs.
+    for m, k, n in [(900, 27, 48), (784, 432, 48), (144, 432, 96), (100, 864, 96)]:
+        bm, bn, bk = matmul.auto_blocks(m, k, n)
+        u = matmul.mxu_utilization_estimate(m, n, k, bm, bn, bk)
+        assert u >= 0.70, f"{(m, k, n)}: {u}"

@@ -1,0 +1,107 @@
+"""L2 correctness: EdgeNet forward (Pallas path) vs independent reference.
+
+Also pins the tier ladder properties the scheduler relies on: parameter
+count, FLOPs and profile accuracy must all be monotone in the tier order.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TIER_ORDER = ["tiny", "small", "base", "large"]
+
+
+def _images(seed, batch):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed), (batch, model.IMAGE_SIZE, model.IMAGE_SIZE, model.IMAGE_CHANNELS)
+    )
+
+
+@pytest.mark.parametrize("tier", TIER_ORDER)
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_forward_matches_ref(tier, batch):
+    params = model.init_params(tier)
+    imgs = _images(7, batch)
+    got = model.forward(params, imgs, tier)
+    want = model.forward_ref(params, imgs, tier)
+    assert got.shape == (batch, model.NUM_CLASSES)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 6))
+def test_forward_matches_ref_hypothesis(seed, batch):
+    params = model.init_params("small")
+    imgs = _images(seed, batch)
+    got = model.forward(params, imgs, "small")
+    want = model.forward_ref(params, imgs, "small")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_im2col_matches_ref():
+    imgs = _images(3, 2)
+    got = model._im2col(imgs, 3, 3)
+    want = ref.im2col_ref(imgs, 3, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_im2col_strided_matches_ref():
+    imgs = _images(4, 2)
+    got = model._im2col(imgs, 3, 3, stride=2)
+    want = ref.im2col_ref(imgs, 3, 3, stride=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_params_deterministic():
+    a = model.init_params("tiny")
+    b = model.init_params("tiny")
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_params_differ_across_seeds():
+    a = model.init_params("tiny", seed=1)
+    b = model.init_params("tiny", seed=2)
+    assert any(not np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a)
+
+
+def test_tier_ladder_monotone():
+    counts = [model.param_count(t) for t in TIER_ORDER]
+    flops = [model.flops_per_image(t) for t in TIER_ORDER]
+    accs = [model.TIERS[t].profile_accuracy for t in TIER_ORDER]
+    assert counts == sorted(counts) and len(set(counts)) == len(counts)
+    assert flops == sorted(flops) and len(set(flops)) == len(flops)
+    assert accs == sorted(accs) and len(set(accs)) == len(accs)
+
+
+def test_forward_batch_consistency():
+    """Row i of a batched forward equals the single-image forward."""
+    params = model.init_params("tiny")
+    imgs = _images(11, 4)
+    batched = np.asarray(model.forward(params, imgs, "tiny"))
+    for i in range(4):
+        single = np.asarray(model.forward(params, imgs[i : i + 1], "tiny"))
+        np.testing.assert_allclose(batched[i], single[0], rtol=1e-4, atol=1e-4)
+
+
+def test_serving_fn_closes_over_params():
+    fn, spec = model.serving_fn("tiny", batch=2)
+    assert spec.shape == (2, 32, 32, 3)
+    imgs = _images(5, 2)
+    (got,) = fn(imgs)
+    want = model.forward(model.init_params("tiny"), imgs, "tiny")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_logits_finite():
+    for tier in TIER_ORDER:
+        params = model.init_params(tier)
+        out = np.asarray(model.forward(params, _images(9, 2), tier))
+        assert np.all(np.isfinite(out))

@@ -1,0 +1,178 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Tier computation-cost model** — the paper's testbed charges one
+//!    thread per request regardless of model (`tier_cost_growth = 0`);
+//!    what if heavier tiers cost proportionally more γ?
+//! 2. **QoS strictness** — hard thresholds (constraints 2b/2c) vs the
+//!    paper's "special case" soft mode where thresholds are suggestions.
+//! 3. **Satisfaction weights** — w_a vs w_c trade-off (the paper fixes
+//!    both at 1; its future work calls out differing priorities).
+//! 4. **Cloud sizing** — the paper's "resource-constrained cloud" claim:
+//!    how satisfaction moves as the cloud grows from edge-class to
+//!    effectively unconstrained.
+//! 5. **Bandwidth-estimator** — the paper's two-sample average vs a
+//!    static estimate, on a drifting channel.
+
+use edgeus::coordinator::gus::Gus;
+use edgeus::coordinator::us::ConstraintMode;
+use edgeus::coordinator::Scheduler;
+use edgeus::model::service::CatalogParams;
+use edgeus::net::{BandwidthEstimator, Link};
+use edgeus::sim::MonteCarlo;
+use edgeus::util::rng::Rng;
+use edgeus::util::stats::Accumulator;
+use edgeus::workload::{build_instance, ScenarioParams, WorkloadParams};
+
+fn runs() -> usize {
+    std::env::var("EDGEUS_BENCH_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(150)
+}
+
+fn mc(scenario: ScenarioParams) -> MonteCarlo {
+    MonteCarlo { scenario, runs: runs(), base_seed: 7, ..Default::default() }
+}
+
+fn main() {
+    ablation_tier_cost();
+    ablation_soft_qos();
+    ablation_weights();
+    ablation_cloud_sizing();
+    ablation_bandwidth_estimator();
+}
+
+fn ablation_tier_cost() {
+    println!("\n## ablation 1 — tier computation-cost model (GUS satisfied %)\n");
+    println!("| tier_cost_growth | gus | happy-computation | local-all |");
+    println!("|---|---|---|---|");
+    for growth in [0.0, 0.5, 1.0, 2.0] {
+        let scenario = ScenarioParams {
+            catalog: CatalogParams { tier_cost_growth: growth, ..Default::default() },
+            ..Default::default()
+        };
+        let stats = mc(scenario).run();
+        let by = |n: &str| stats.iter().find(|s| s.name == n).unwrap().satisfied_pct.mean();
+        println!(
+            "| {growth} | {:.2} | {:.2} | {:.2} |",
+            by("gus"),
+            by("happy-computation"),
+            by("local-all")
+        );
+    }
+    println!(
+        "\n(costlier high-accuracy tiers shrink the effective capacity the greedy\n\
+         consumes — the flat model matches the paper's one-thread-per-request testbed)"
+    );
+}
+
+fn ablation_soft_qos() {
+    println!("\n## ablation 2 — strict vs soft QoS (the paper's special case)\n");
+    println!("| mode | served % | satisfied % | objective |");
+    println!("|---|---|---|---|");
+    for (name, mode) in [
+        ("strict (2b)/(2c)", ConstraintMode::STRICT),
+        ("soft (suggestions)", ConstraintMode::SOFT_QOS),
+    ] {
+        let mut served = Accumulator::new();
+        let mut satisfied = Accumulator::new();
+        let mut objective = Accumulator::new();
+        for run in 0..runs() {
+            let mut rng = Rng::new(7 ^ (run as u64).wrapping_mul(0x9E37));
+            let inst = build_instance(&ScenarioParams::default(), &mut rng);
+            let s = Gus::with_mode(mode).schedule(&inst, &mut rng);
+            served.push(100.0 * s.served() as f64 / inst.num_requests() as f64);
+            satisfied.push(s.satisfied_pct(&inst));
+            objective.push(s.objective());
+        }
+        println!(
+            "| {name} | {:.2} | {:.2} | {:.4} |",
+            served.mean(),
+            satisfied.mean(),
+            objective.mean()
+        );
+    }
+    println!("\n(soft mode serves more users but satisfies the same or fewer — extra\n\
+         assignments violate a threshold by construction)");
+}
+
+fn ablation_weights() {
+    println!("\n## ablation 3 — satisfaction weights w_a vs w_c (GUS)\n");
+    println!("| (w_a, w_c) | satisfied % | mean accuracy slack | mean time slack |");
+    println!("|---|---|---|---|");
+    for (wa, wc) in [(1.0, 1.0), (1.0, 0.25), (0.25, 1.0), (0.0, 1.0), (1.0, 0.0)] {
+        let mut satisfied = Accumulator::new();
+        let mut acc_slack = Accumulator::new();
+        let mut time_slack = Accumulator::new();
+        for run in 0..runs() {
+            let mut rng = Rng::new(11 ^ (run as u64).wrapping_mul(0x9E37));
+            let scenario = ScenarioParams {
+                workload: WorkloadParams { w_accuracy: wa, w_completion: wc, ..Default::default() },
+                ..Default::default()
+            };
+            let inst = build_instance(&scenario, &mut rng);
+            let s = Gus::default().schedule(&inst, &mut rng);
+            satisfied.push(s.satisfied_pct(&inst));
+            for a in s.slots.iter().flatten() {
+                let req = &inst.requests[a.request.0];
+                acc_slack.push(a.candidate.accuracy_pct - req.min_accuracy_pct);
+                time_slack.push(req.max_completion_ms - a.candidate.completion_ms);
+            }
+        }
+        println!(
+            "| ({wa}, {wc}) | {:.2} | {:.1} pp | {:.0} ms |",
+            satisfied.mean(),
+            acc_slack.mean(),
+            time_slack.mean()
+        );
+    }
+    println!("\n(accuracy-weighted users get higher-tier models; delay-weighted users\n\
+         get faster placements — the knob works end to end)");
+}
+
+fn ablation_cloud_sizing() {
+    println!("\n## ablation 4 — how constrained must the cloud be to matter?\n");
+    println!("| cloud γ scale | gus satisfied % | cloud share of decisions % |");
+    println!("|---|---|---|");
+    for scale in [0.25, 1.0, 4.0, 16.0] {
+        let mut satisfied = Accumulator::new();
+        let mut cloud_share = Accumulator::new();
+        for run in 0..runs() {
+            let mut rng = Rng::new(13 ^ (run as u64).wrapping_mul(0x9E37));
+            let mut inst = build_instance(&ScenarioParams::default(), &mut rng);
+            for s in &mut inst.topology.servers {
+                if s.is_cloud() {
+                    s.gamma *= scale;
+                    s.eta *= scale;
+                }
+            }
+            let s = Gus::default().schedule(&inst, &mut rng);
+            satisfied.push(s.satisfied_pct(&inst));
+            let mix = s.decision_mix_pct(&inst);
+            cloud_share.push(mix[1]);
+        }
+        println!("| {scale} | {:.2} | {:.2} |", satisfied.mean(), cloud_share.mean());
+    }
+    println!("\n(the paper's resource-constrained-cloud assumption is the regime where\n\
+         scheduling matters; with a huge cloud, offload-all becomes near-optimal)");
+}
+
+fn ablation_bandwidth_estimator() {
+    println!("\n## ablation 5 — bandwidth estimator on a drifting channel\n");
+    // Channel drifts 600 -> 200 bytes/ms; compare expected-delay error.
+    let mut rng = Rng::new(17);
+    let mut est = BandwidthEstimator::new(600.0);
+    let mut est_err = Accumulator::new();
+    let mut static_err = Accumulator::new();
+    for step in 0..200 {
+        let true_bw = 600.0 - 400.0 * (step as f64 / 200.0);
+        let link = Link::new(true_bw, 0.2, 0.0);
+        let (true_delay, realized) = link.transfer(14_000, &mut rng);
+        est_err.push((est.expected_delay_ms(14_000) - true_delay).abs());
+        static_err.push((14_000.0 / 600.0 - true_delay).abs());
+        est.observe(realized);
+    }
+    println!("| estimator | mean |delay error| (ms) |");
+    println!("|---|---|");
+    println!("| paper E[B]=(B_t+B_t-1)/2 | {:.2} |", est_err.mean());
+    println!("| static 600 bytes/ms | {:.2} |", static_err.mean());
+    println!("\n(the paper's adaptive rule tracks the drift; a static estimate\n\
+         accumulates error as the channel degrades)");
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate the paper's numerical panels Fig. 1(a)–(d).
+//!
+//! Prints the full satisfied-% series per policy (the paper's plotted
+//! data) plus harness timings for the Monte-Carlo sweeps. Scale with
+//! `EDGEUS_BENCH_RUNS` (Monte-Carlo runs per sweep point; default 200 —
+//! the paper used 20 000, which the same command reproduces given time).
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::figures::{run_numerical_sweep, NumericalConfig, NumericalFigure};
+
+fn main() {
+    let runs: usize = std::env::var("EDGEUS_BENCH_RUNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let mut cfg = NumericalConfig::default();
+    cfg.runs = runs;
+
+    let mut results = Vec::new();
+    for figure in [
+        NumericalFigure::Fig1a,
+        NumericalFigure::Fig1b,
+        NumericalFigure::Fig1c,
+        NumericalFigure::Fig1d,
+    ] {
+        let sweep = figure.default_sweep();
+        let bencher = Bencher::new(0, 1).with_items((runs * sweep.len()) as f64);
+        let mut series = None;
+        let r = bencher.run(figure.id(), || {
+            series = Some(run_numerical_sweep(figure, &cfg, &sweep));
+        });
+        let series = series.unwrap();
+        println!(
+            "\n# {} — satisfied users (%) vs {} [{} MC runs/point]\n",
+            figure.id(),
+            series.x_label,
+            runs
+        );
+        println!("{}", series.to_markdown());
+        results.push(r);
+    }
+    println!("{}", report("fig1 numerical sweeps (items = MC instances)", &results));
+}

@@ -1,0 +1,60 @@
+//! Bench: regenerate the paper's testbed panels Fig. 1(e)–(h) on the
+//! live serving runtime (real PJRT inference per request).
+//!
+//! Requires `make artifacts`. Scale knobs:
+//!   EDGEUS_BENCH_LOADS   comma list of offered loads (default 60,120,240,360)
+//!   EDGEUS_BENCH_SCALE   time compression factor (default 50)
+
+use edgeus::serving::TestbedExperiment;
+
+fn main() {
+    let loads: Vec<usize> = std::env::var("EDGEUS_BENCH_LOADS")
+        .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![60, 120, 240, 360]);
+    let scale: f64 = std::env::var("EDGEUS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50.0);
+
+    let mut exp = TestbedExperiment::default();
+    exp.loads = loads;
+    exp.base.time_scale = scale;
+    if !std::path::Path::new(&format!("{}/manifest.json", exp.base.artifacts_dir)).exists() {
+        eprintln!(
+            "SKIP fig1_testbed: no artifacts at {}/ — run `make artifacts`",
+            exp.base.artifacts_dir
+        );
+        return;
+    }
+
+    eprintln!(
+        "testbed sweep: loads {:?}, policies {:?}, time scale {}x",
+        exp.loads, exp.policies, scale
+    );
+    let t0 = std::time::Instant::now();
+    let result = exp.run().expect("testbed experiment failed");
+    for (panel, series) in [
+        ("fig1e — satisfied users (%)", &result.satisfied),
+        ("fig1f — locally processed (%)", &result.local),
+        ("fig1g — offloaded to cloud (%)", &result.cloud),
+        ("fig1h — offloaded to peer edges (%)", &result.peer),
+    ] {
+        println!("\n# {panel}\n\n{}", series.to_markdown());
+    }
+    // Per-run serving performance (latency/throughput of the system).
+    println!("\n## per-run serving metrics\n");
+    println!("| policy | load | satisfied % | p50 latency (sim ms) | p99 | mean inference (real ms) |");
+    println!("|---|---|---|---|---|---|");
+    for (policy, load, m) in &result.raw {
+        println!(
+            "| {} | {} | {:.1} | {:.0} | {:.0} | {:.2} |",
+            policy,
+            load,
+            m.satisfied_pct(),
+            m.latency.quantile(0.5),
+            m.latency.quantile(0.99),
+            m.inference.mean(),
+        );
+    }
+    println!("\ntotal wall time: {:.1}s", t0.elapsed().as_secs_f64());
+}

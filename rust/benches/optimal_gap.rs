@@ -1,0 +1,51 @@
+//! Bench: the paper's in-text optimality claim (T0) — GUS attains ~90%
+//! of the exact optimum on small instances — plus B&B solver cost.
+//!
+//! Scale with EDGEUS_BENCH_INSTANCES (instances per size, default 20).
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::coordinator::gus::Gus;
+use edgeus::coordinator::ilp::BranchAndBound;
+use edgeus::coordinator::Scheduler;
+use edgeus::figures::run_optimal_gap;
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::util::rng::Rng;
+use edgeus::workload::{build_instance, ScenarioParams, WorkloadParams};
+
+fn main() {
+    let instances: usize = std::env::var("EDGEUS_BENCH_INSTANCES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+
+    // The headline table.
+    let sizes = [3, 5, 8, 10, 12];
+    let result = run_optimal_gap(&sizes, instances, 7);
+    println!("\n# GUS vs exact optimum — {} instances per size\n", instances);
+    println!("{}", result.series.to_markdown());
+    println!(
+        "mean GUS/OPT ratio: {:.3} (paper: ~0.90); proven exact: {:.0}%\n",
+        result.mean_ratio,
+        100.0 * result.exact_fraction
+    );
+
+    // Solver cost scaling.
+    let mut results = Vec::new();
+    for n in sizes {
+        let scenario = ScenarioParams {
+            topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            catalog: CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+            workload: WorkloadParams { num_requests: n, ..Default::default() },
+        };
+        let inst = build_instance(&scenario, &mut Rng::new(99 + n as u64));
+        let bencher = Bencher::new(1, 5);
+        results.push(bencher.run(&format!("bb_n{n}"), || {
+            BranchAndBound::default().solve(&inst)
+        }));
+        results.push(bencher.run(&format!("gus_n{n}"), || {
+            Gus::default().schedule(&inst, &mut Rng::new(0))
+        }));
+    }
+    println!("{}", report("solver cost (B&B vs GUS)", &results));
+}

@@ -1,0 +1,38 @@
+//! Bench: the PJRT inference hot path per (tier, batch) — the L1/L2
+//! serving cost that the coordinator's processing-delay profiles wrap.
+//!
+//! Requires `make artifacts`.
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::runtime::InferenceEngine;
+
+fn main() {
+    let dir = std::env::var("EDGEUS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("SKIP runtime_inference: no artifacts at {dir}/ — run `make artifacts`");
+        return;
+    }
+    let engine = InferenceEngine::load(&dir).expect("loading artifacts");
+    println!("platform: {}; artifacts: {}", engine.platform(), engine.artifact_names().len());
+
+    let mut results = Vec::new();
+    let manifest = engine.manifest.clone();
+    for tier in manifest.tiers() {
+        for batch in manifest.batches_of(&tier) {
+            let info = manifest.find(&tier, batch).unwrap();
+            let images = vec![0.5f32; info.input_shape.iter().product()];
+            let flops = (info.flops_per_image * batch as u64) as f64;
+            let bencher = Bencher::new(3, 15).with_items(batch as f64);
+            let name = format!("{}_b{}", tier, batch);
+            let r = bencher.run(&name, || engine.infer_tier(&tier, batch, &images).unwrap());
+            println!(
+                "{name}: {:.3} ms/iter → {:.1} img/s, {:.2} GFLOP/s",
+                r.mean_ms,
+                r.throughput.unwrap_or(0.0),
+                flops / (r.mean_ms / 1e3) / 1e9
+            );
+            results.push(r);
+        }
+    }
+    println!("{}", report("PJRT inference latency (items = images/iter)", &results));
+}

@@ -1,0 +1,67 @@
+//! Bench: L3 scheduler hot path. The paper assumes decision time is
+//! negligible relative to the 3000 ms decision frame; this bench verifies
+//! that and tracks the GUS inner loop's scaling (O(|N| (|L||M|)²) worst
+//! case from the per-request candidate sort).
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::coordinator::{all_schedulers, Scheduler};
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::util::rng::Rng;
+use edgeus::workload::{build_instance, ScenarioParams, WorkloadParams};
+
+fn main() {
+    // Paper-default shape, sweeping N.
+    let mut results = Vec::new();
+    for n in [100usize, 500, 1000, 5000] {
+        let scenario = ScenarioParams {
+            workload: WorkloadParams { num_requests: n, ..Default::default() },
+            ..Default::default()
+        };
+        let inst = build_instance(&scenario, &mut Rng::new(3));
+        let bencher = Bencher::new(1, 8).with_items(n as f64);
+        for sched in all_schedulers() {
+            if n > 1000 && sched.name() != "gus" {
+                continue; // deep sweep only for the paper's algorithm
+            }
+            let name = format!("{}_n{}", sched.name(), n);
+            results.push(bencher.run(&name, || {
+                sched.schedule(&inst, &mut Rng::new(0))
+            }));
+        }
+    }
+    println!("{}", report("scheduler latency (items = requests/decision)", &results));
+
+    // Candidate-set scaling: |M| and |L| sweeps at N=100.
+    let mut shape_results = Vec::new();
+    for (m, l) in [(10usize, 10usize), (20, 10), (10, 20), (30, 30)] {
+        let scenario = ScenarioParams {
+            topology: TopologyParams { num_edge: m - 1, num_cloud: 1, ..Default::default() },
+            catalog: CatalogParams { num_tiers: l, ..Default::default() },
+            workload: WorkloadParams { num_requests: 100, ..Default::default() },
+        };
+        let inst = build_instance(&scenario, &mut Rng::new(5));
+        let bencher = Bencher::new(1, 5).with_items(100.0);
+        let gus = edgeus::coordinator::gus::Gus::default();
+        shape_results.push(bencher.run(&format!("gus_M{m}_L{l}"), || {
+            gus.schedule(&inst, &mut Rng::new(0))
+        }));
+    }
+    println!("{}", report("GUS vs candidate-set size (M servers x L tiers)", &shape_results));
+
+    // The paper's feasibility condition: a decision for the testbed frame
+    // (N ≤ ~20 queued) must be far below the 3000 ms frame.
+    let scenario = ScenarioParams {
+        workload: WorkloadParams { num_requests: 20, ..Default::default() },
+        ..Default::default()
+    };
+    let inst = build_instance(&scenario, &mut Rng::new(9));
+    let gus = edgeus::coordinator::gus::Gus::default();
+    let r = Bencher::new(2, 20).run("gus_frame_n20", || gus.schedule(&inst, &mut Rng::new(0)));
+    println!(
+        "\nframe feasibility: GUS decision for 20 queued requests = {:.3} ms \
+         ({}x under the 3000 ms frame)\n",
+        r.mean_ms,
+        (3000.0 / r.mean_ms) as u64
+    );
+}

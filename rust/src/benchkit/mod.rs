@@ -1,0 +1,133 @@
+//! In-tree micro/macro-benchmark harness (the offline registry has no
+//! criterion). Provides warmup + repeated timed runs, robust summary
+//! stats, and markdown reporting; the `cargo bench` targets are plain
+//! `harness = false` binaries built on this.
+
+use crate::util::stats::{percentile, Accumulator};
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+    /// Optional throughput annotation (items/s), when `items_per_iter`
+    /// was set.
+    pub throughput: Option<f64>,
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Per-iteration item count for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 2, iters: 10, items_per_iter: None }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup_iters: usize, iters: usize) -> Bencher {
+        Bencher { warmup_iters, iters, items_per_iter: None }
+    }
+
+    pub fn with_items(mut self, items: f64) -> Bencher {
+        self.items_per_iter = Some(items);
+        self
+    }
+
+    /// Time `f` (a full benchmark iteration). The closure's return value
+    /// is black-boxed to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let mut acc = Accumulator::new();
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            samples.push(ms);
+            acc.push(ms);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ms: acc.mean(),
+            std_ms: acc.std(),
+            min_ms: acc.min(),
+            p50_ms: percentile(&samples, 0.5),
+            p95_ms: percentile(&samples, 0.95),
+            max_ms: acc.max(),
+            throughput: self.items_per_iter.map(|n| n / (acc.mean() / 1e3)),
+        }
+    }
+}
+
+/// Render a set of results as a markdown table.
+pub fn report(title: &str, results: &[BenchResult]) -> String {
+    let mut out = format!("\n## {title}\n\n");
+    out.push_str("| case | iters | mean (ms) | std | min | p50 | p95 | max | throughput |\n");
+    out.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    for r in results {
+        out.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {} |\n",
+            r.name,
+            r.iters,
+            r.mean_ms,
+            r.std_ms,
+            r.min_ms,
+            r.p50_ms,
+            r.p95_ms,
+            r.max_ms,
+            r.throughput
+                .map(|t| format!("{t:.1}/s"))
+                .unwrap_or_else(|| "-".into()),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_stats() {
+        let b = Bencher::new(1, 5);
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 2.0);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.max_ms);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bencher::new(0, 3).with_items(100.0);
+        let r = b.run("t", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        let t = r.throughput.unwrap();
+        assert!(t > 1000.0 && t < 100_000_0.0, "t={t}");
+    }
+
+    #[test]
+    fn report_renders_all_rows() {
+        let b = Bencher::new(0, 2);
+        let rs = vec![b.run("a", || 1 + 1), b.run("b", || 2 + 2)];
+        let md = report("title", &rs);
+        assert!(md.contains("## title"));
+        assert!(md.contains("| a |"));
+        assert!(md.contains("| b |"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Config system: JSON scenario files mapping onto the workload/topology/
+//! catalog parameter structs, with paper defaults for anything omitted.
+//!
+//! ```json
+//! {
+//!   "topology": {"num_edge": 9, "num_cloud": 1},
+//!   "catalog":  {"num_services": 100, "num_tiers": 10},
+//!   "workload": {"num_requests": 100, "accuracy_mean_pct": 45.0},
+//!   "runs": 2000, "seed": 7
+//! }
+//! ```
+
+use crate::model::service::CatalogParams;
+use crate::model::topology::TopologyParams;
+use crate::sim::MonteCarlo;
+use crate::util::json::Json;
+use crate::workload::{ScenarioParams, WorkloadParams};
+use anyhow::{Context, Result};
+
+fn f(j: &Json, key: &str, default: f64) -> f64 {
+    j.get(key).as_f64().unwrap_or(default)
+}
+
+fn u(j: &Json, key: &str, default: usize) -> usize {
+    j.get(key).as_usize().unwrap_or(default)
+}
+
+pub fn topology_from_json(j: &Json) -> TopologyParams {
+    let d = TopologyParams::default();
+    TopologyParams {
+        num_edge: u(j, "num_edge", d.num_edge),
+        num_cloud: u(j, "num_cloud", d.num_cloud),
+        edge_edge_ms: f(j, "edge_edge_ms", d.edge_edge_ms),
+        edge_cloud_ms: f(j, "edge_cloud_ms", d.edge_cloud_ms),
+        jitter: f(j, "jitter", d.jitter),
+    }
+}
+
+pub fn catalog_from_json(j: &Json) -> CatalogParams {
+    let d = CatalogParams::default();
+    CatalogParams {
+        num_services: u(j, "num_services", d.num_services),
+        num_tiers: u(j, "num_tiers", d.num_tiers),
+        edge_proc_lo_ms: f(j, "edge_proc_lo_ms", d.edge_proc_lo_ms),
+        edge_proc_hi_ms: f(j, "edge_proc_hi_ms", d.edge_proc_hi_ms),
+        cloud_proc_ms: f(j, "cloud_proc_ms", d.cloud_proc_ms),
+        accuracy_lo_pct: f(j, "accuracy_lo_pct", d.accuracy_lo_pct),
+        accuracy_hi_pct: f(j, "accuracy_hi_pct", d.accuracy_hi_pct),
+        tier_slowdown: f(j, "tier_slowdown", d.tier_slowdown),
+        tier_cost_growth: f(j, "tier_cost_growth", d.tier_cost_growth),
+    }
+}
+
+pub fn workload_from_json(j: &Json) -> WorkloadParams {
+    let d = WorkloadParams::default();
+    WorkloadParams {
+        num_requests: u(j, "num_requests", d.num_requests),
+        accuracy_mean_pct: f(j, "accuracy_mean_pct", d.accuracy_mean_pct),
+        accuracy_std_pct: f(j, "accuracy_std_pct", d.accuracy_std_pct),
+        deadline_mean_ms: f(j, "deadline_mean_ms", d.deadline_mean_ms),
+        deadline_std_ms: f(j, "deadline_std_ms", d.deadline_std_ms),
+        queue_delay_max_ms: f(j, "queue_delay_max_ms", d.queue_delay_max_ms),
+        w_accuracy: f(j, "w_accuracy", d.w_accuracy),
+        w_completion: f(j, "w_completion", d.w_completion),
+        payload_lo_bytes: j.get("payload_lo_bytes").as_usize().unwrap_or(d.payload_lo_bytes as usize)
+            as u64,
+        payload_hi_bytes: j.get("payload_hi_bytes").as_usize().unwrap_or(d.payload_hi_bytes as usize)
+            as u64,
+        max_completion_ms: f(j, "max_completion_ms", d.max_completion_ms),
+    }
+}
+
+pub fn scenario_from_json(j: &Json) -> ScenarioParams {
+    ScenarioParams {
+        topology: topology_from_json(j.get("topology")),
+        catalog: catalog_from_json(j.get("catalog")),
+        workload: workload_from_json(j.get("workload")),
+    }
+}
+
+/// Parse a complete Monte-Carlo experiment description.
+pub fn montecarlo_from_json(j: &Json) -> MonteCarlo {
+    let d = MonteCarlo::default();
+    MonteCarlo {
+        scenario: scenario_from_json(j),
+        runs: u(j, "runs", d.runs),
+        base_seed: j.get("seed").as_i64().map(|s| s as u64).unwrap_or(d.base_seed),
+        threads: u(j, "threads", d.threads),
+    }
+}
+
+/// Load a scenario/experiment config from a JSON file.
+pub fn load_montecarlo(path: &str) -> Result<MonteCarlo> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    Ok(montecarlo_from_json(&j))
+}
+
+pub fn scenario_to_json(s: &ScenarioParams) -> Json {
+    Json::obj(vec![
+        (
+            "topology",
+            Json::obj(vec![
+                ("num_edge", Json::num(s.topology.num_edge as f64)),
+                ("num_cloud", Json::num(s.topology.num_cloud as f64)),
+                ("edge_edge_ms", Json::num(s.topology.edge_edge_ms)),
+                ("edge_cloud_ms", Json::num(s.topology.edge_cloud_ms)),
+                ("jitter", Json::num(s.topology.jitter)),
+            ]),
+        ),
+        (
+            "catalog",
+            Json::obj(vec![
+                ("num_services", Json::num(s.catalog.num_services as f64)),
+                ("num_tiers", Json::num(s.catalog.num_tiers as f64)),
+                ("edge_proc_lo_ms", Json::num(s.catalog.edge_proc_lo_ms)),
+                ("edge_proc_hi_ms", Json::num(s.catalog.edge_proc_hi_ms)),
+                ("cloud_proc_ms", Json::num(s.catalog.cloud_proc_ms)),
+                ("accuracy_lo_pct", Json::num(s.catalog.accuracy_lo_pct)),
+                ("accuracy_hi_pct", Json::num(s.catalog.accuracy_hi_pct)),
+                ("tier_slowdown", Json::num(s.catalog.tier_slowdown)),
+            ]),
+        ),
+        (
+            "workload",
+            Json::obj(vec![
+                ("num_requests", Json::num(s.workload.num_requests as f64)),
+                ("accuracy_mean_pct", Json::num(s.workload.accuracy_mean_pct)),
+                ("accuracy_std_pct", Json::num(s.workload.accuracy_std_pct)),
+                ("deadline_mean_ms", Json::num(s.workload.deadline_mean_ms)),
+                ("deadline_std_ms", Json::num(s.workload.deadline_std_ms)),
+                ("queue_delay_max_ms", Json::num(s.workload.queue_delay_max_ms)),
+                ("w_accuracy", Json::num(s.workload.w_accuracy)),
+                ("w_completion", Json::num(s.workload.w_completion)),
+                ("max_completion_ms", Json::num(s.workload.max_completion_ms)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let mc = montecarlo_from_json(&Json::parse("{}").unwrap());
+        assert_eq!(mc.scenario.topology.num_edge, 9);
+        assert_eq!(mc.scenario.topology.num_cloud, 1);
+        assert_eq!(mc.scenario.catalog.num_services, 100);
+        assert_eq!(mc.scenario.catalog.num_tiers, 10);
+        assert_eq!(mc.scenario.workload.num_requests, 100);
+        assert_eq!(mc.scenario.workload.accuracy_mean_pct, 45.0);
+        assert_eq!(mc.scenario.workload.deadline_mean_ms, 1000.0);
+        assert_eq!(mc.scenario.workload.max_completion_ms, 12_000.0);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let j = Json::parse(
+            r#"{"topology":{"num_edge":4},"workload":{"num_requests":50},"runs":10,"seed":99}"#,
+        )
+        .unwrap();
+        let mc = montecarlo_from_json(&j);
+        assert_eq!(mc.scenario.topology.num_edge, 4);
+        assert_eq!(mc.scenario.workload.num_requests, 50);
+        assert_eq!(mc.runs, 10);
+        assert_eq!(mc.base_seed, 99);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_scenario() {
+        let s = ScenarioParams::default();
+        let j = scenario_to_json(&s);
+        let s2 = scenario_from_json(&Json::parse(&j.pretty()).unwrap());
+        assert_eq!(s2.topology.num_edge, s.topology.num_edge);
+        assert_eq!(s2.catalog.tier_slowdown, s.catalog.tier_slowdown);
+        assert_eq!(s2.workload.deadline_std_ms, s.workload.deadline_std_ms);
+    }
+
+    #[test]
+    fn load_from_file() {
+        let dir = std::env::temp_dir().join("edgeus_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, r#"{"runs": 3}"#).unwrap();
+        let mc = load_montecarlo(path.to_str().unwrap()).unwrap();
+        assert_eq!(mc.runs, 3);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load_montecarlo("/nonexistent/x.json").is_err());
+    }
+}

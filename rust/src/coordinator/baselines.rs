@@ -1,0 +1,250 @@
+//! The five baseline heuristics of §IV.
+//!
+//! 1. **Random-Assignment** — pick a server uniformly at random; serve
+//!    there iff some tier meets QoS and capacity, else drop.
+//! 2. **Offload-All** — send everything to the cloud.
+//! 3. **Local-All** — serve everything at the covering edge server.
+//! 4. **Happy-Computation** — GUS with the computation constraint (2d)
+//!    relaxed.
+//! 5. **Happy-Communication** — GUS with the communication constraint
+//!    (2e) relaxed.
+
+use crate::coordinator::gus::Gus;
+use crate::coordinator::us::{
+    qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
+};
+use crate::coordinator::Scheduler;
+use crate::model::instance::Candidate;
+use crate::model::request::Request;
+use crate::model::{ProblemInstance, ServerId};
+use crate::util::rng::Rng;
+
+/// Rank the QoS-feasible candidates for request `i` restricted to server
+/// `j`, best US first.
+fn ranked_on_server(
+    inst: &ProblemInstance,
+    i: usize,
+    server: ServerId,
+) -> Vec<(f64, Candidate)> {
+    let req = &inst.requests[i];
+    let mut v: Vec<(f64, Candidate)> = inst
+        .candidates(i)
+        .into_iter()
+        .filter(|c| c.server == server && qos_satisfied(req, c))
+        .map(|c| (user_satisfaction(req, &c, inst.max_accuracy_pct, inst.max_completion_ms), c))
+        .collect();
+    v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    v
+}
+
+fn try_assign(
+    schedule: &mut Schedule,
+    tracker: &mut CapacityTracker,
+    req: &Request,
+    i: usize,
+    ranked: &[(f64, Candidate)],
+) {
+    for (us, cand) in ranked {
+        if tracker.fits(req, cand) {
+            tracker.commit(req, cand);
+            schedule.slots[i] = Some(Assignment { request: req.id, candidate: *cand, us: *us });
+            return;
+        }
+    }
+}
+
+/// Baseline 1: a uniformly random server; drop if it cannot satisfy.
+pub struct RandomAssignment;
+
+impl Scheduler for RandomAssignment {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
+        let mut schedule = Schedule::empty(inst.num_requests());
+        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+        for i in 0..inst.num_requests() {
+            let req = &inst.requests[i];
+            let server = ServerId(rng.index(inst.num_servers()));
+            let ranked = ranked_on_server(inst, i, server);
+            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+        }
+        schedule
+    }
+}
+
+/// Baseline 2: offload everything to the cloud tier.
+pub struct OffloadAll;
+
+impl Scheduler for OffloadAll {
+    fn name(&self) -> &'static str {
+        "offload-all"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
+        let mut schedule = Schedule::empty(inst.num_requests());
+        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+        let clouds = inst.topology.cloud_ids();
+        for i in 0..inst.num_requests() {
+            let req = &inst.requests[i];
+            // With several clouds, rank across all of them.
+            let mut ranked: Vec<(f64, Candidate)> = Vec::new();
+            for &c in &clouds {
+                ranked.extend(ranked_on_server(inst, i, c));
+            }
+            ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+        }
+        schedule
+    }
+}
+
+/// Baseline 3: serve everything at the covering edge server.
+pub struct LocalAll;
+
+impl Scheduler for LocalAll {
+    fn name(&self) -> &'static str {
+        "local-all"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
+        let mut schedule = Schedule::empty(inst.num_requests());
+        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+        for i in 0..inst.num_requests() {
+            let req = &inst.requests[i];
+            let ranked = ranked_on_server(inst, i, req.covering);
+            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+        }
+        schedule
+    }
+}
+
+/// Baseline 4: no computation limit (constraint 2d relaxed).
+pub struct HappyComputation;
+
+impl Scheduler for HappyComputation {
+    fn name(&self) -> &'static str {
+        "happy-computation"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
+        Gus::with_mode(ConstraintMode::HAPPY_COMPUTATION).schedule(inst, rng)
+    }
+}
+
+/// Baseline 5: no communication limit (constraint 2e relaxed).
+pub struct HappyCommunication;
+
+impl Scheduler for HappyCommunication {
+    fn name(&self) -> &'static str {
+        "happy-communication"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
+        Gus::with_mode(ConstraintMode::HAPPY_COMMUNICATION).schedule(inst, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::us::validate_schedule;
+    use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
+    use crate::model::topology::{Topology, TopologyParams};
+
+    fn instance(n: usize, seed: u64) -> ProblemInstance {
+        let mut rng = Rng::new(seed);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 4, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 5, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 5);
+        let requests = (0..n)
+            .map(|i| {
+                Request::new(i, i % 5, i % 4)
+                    .with_qos(rng.uniform(30.0, 60.0), rng.uniform(1500.0, 8000.0))
+            })
+            .collect();
+        ProblemInstance::new(topology, catalog, placement, requests)
+    }
+
+    #[test]
+    fn offload_all_uses_only_cloud() {
+        let inst = instance(20, 1);
+        let s = OffloadAll.schedule(&inst, &mut Rng::new(0));
+        for a in s.slots.iter().flatten() {
+            assert!(inst.topology.server(a.candidate.server).is_cloud());
+        }
+        validate_schedule(&inst, &s, ConstraintMode::STRICT).unwrap();
+    }
+
+    #[test]
+    fn local_all_never_offloads() {
+        let inst = instance(20, 2);
+        let s = LocalAll.schedule(&inst, &mut Rng::new(0));
+        for (i, a) in s.slots.iter().enumerate() {
+            if let Some(a) = a {
+                assert_eq!(a.candidate.server, inst.requests[i].covering);
+                assert!(!a.candidate.offloaded);
+            }
+        }
+        validate_schedule(&inst, &s, ConstraintMode::STRICT).unwrap();
+    }
+
+    #[test]
+    fn random_is_valid_and_seed_dependent() {
+        let inst = instance(30, 3);
+        let a = RandomAssignment.schedule(&inst, &mut Rng::new(1));
+        let b = RandomAssignment.schedule(&inst, &mut Rng::new(2));
+        validate_schedule(&inst, &a, ConstraintMode::STRICT).unwrap();
+        validate_schedule(&inst, &b, ConstraintMode::STRICT).unwrap();
+        let servers = |s: &Schedule| {
+            s.slots
+                .iter()
+                .map(|x| x.as_ref().map(|a| a.candidate.server.0))
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(servers(&a), servers(&b), "different seeds should differ");
+    }
+
+    #[test]
+    fn happy_computation_never_violates_communication() {
+        let inst = instance(40, 4);
+        let s = HappyComputation.schedule(&inst, &mut Rng::new(0));
+        validate_schedule(&inst, &s, ConstraintMode::HAPPY_COMPUTATION).unwrap();
+    }
+
+    #[test]
+    fn happy_communication_never_violates_computation() {
+        let inst = instance(40, 5);
+        let s = HappyCommunication.schedule(&inst, &mut Rng::new(0));
+        validate_schedule(&inst, &s, ConstraintMode::HAPPY_COMMUNICATION).unwrap();
+    }
+
+    #[test]
+    fn happy_variants_serve_at_least_as_many_as_gus() {
+        // Relaxing a constraint can only help the greedy.
+        for seed in 1..6 {
+            let inst = instance(60, seed);
+            let gus = Gus::default().schedule(&inst, &mut Rng::new(0));
+            let hc = HappyComputation.schedule(&inst, &mut Rng::new(0));
+            let hm = HappyCommunication.schedule(&inst, &mut Rng::new(0));
+            assert!(hc.served() >= gus.served());
+            assert!(hm.served() >= gus.served());
+        }
+    }
+
+    #[test]
+    fn all_baselines_never_assign_infeasible_qos() {
+        let inst = instance(30, 6);
+        for sched in crate::coordinator::all_schedulers() {
+            let s = sched.schedule(&inst, &mut Rng::new(0));
+            assert_eq!(s.satisfied(&inst), s.served(), "{} assigned non-QoS", sched.name());
+        }
+    }
+}

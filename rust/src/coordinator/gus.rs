@@ -1,0 +1,309 @@
+//! GUS — the paper's Greedy User Satisfaction algorithm (Algorithm 1).
+//!
+//! For each request, rank every placement-feasible (server, tier) candidate
+//! by its US value and take the best one that (i) meets both QoS
+//! thresholds, (ii) fits the serving server's residual computation
+//! capacity γ_j, and (iii) — when offloading — fits the covering server's
+//! residual communication capacity η_{s_i}. If no candidate fits, the
+//! request is dropped. Residual capacities are updated after each commit.
+//!
+//! Worst-case complexity O(|N| · (|L||M|)² ) from the per-request sort —
+//! the paper's stated bound; the sort dominates.
+
+use crate::coordinator::us::{
+    qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
+};
+use crate::coordinator::Scheduler;
+use crate::model::ProblemInstance;
+use crate::util::rng::Rng;
+
+/// The GUS policy. `mode` defaults to strict; the Happy-* baselines reuse
+/// this exact machinery with one constraint relaxed.
+#[derive(Clone, Copy, Debug)]
+pub struct Gus {
+    pub mode: ConstraintMode,
+}
+
+impl Default for Gus {
+    fn default() -> Self {
+        Gus { mode: ConstraintMode::STRICT }
+    }
+}
+
+impl Gus {
+    pub fn with_mode(mode: ConstraintMode) -> Gus {
+        Gus { mode }
+    }
+
+    /// Schedule with an externally-owned capacity tracker (the serving
+    /// path carries residual capacities across decision frames).
+    pub fn schedule_with_tracker(
+        &self,
+        inst: &ProblemInstance,
+        tracker: &mut CapacityTracker,
+    ) -> Schedule {
+        let mut schedule = Schedule::empty(inst.num_requests());
+        // Requests are considered highest-priority-first (paper §V future
+        // work); within a priority class, submission order (the paper's
+        // Algorithm 1 order) is preserved.
+        let mut order: Vec<usize> = (0..inst.num_requests()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(inst.requests[i].priority));
+        // Reusable candidate buffer: (us, candidate).
+        let mut ranked = Vec::new();
+        for i in order {
+            let req = &inst.requests[i];
+            ranked.clear();
+            for cand in inst.candidates(i) {
+                if self.mode.qos && !qos_satisfied(req, &cand) {
+                    continue;
+                }
+                let us = user_satisfaction(req, &cand, inst.max_accuracy_pct, inst.max_completion_ms);
+                // Soft-QoS mode (the paper's "special case"): thresholds
+                // are suggestions, but a negative-US option is still
+                // worse than dropping under the MUS objective.
+                if !self.mode.qos && us < 0.0 {
+                    continue;
+                }
+                ranked.push((us, cand));
+            }
+            // Sort by US descending; ties broken toward local processing
+            // (no η spend), then lower tier (cheaper γ).
+            ranked.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0)
+                    .unwrap()
+                    .then_with(|| a.1.offloaded.cmp(&b.1.offloaded))
+                    .then_with(|| a.1.tier.cmp(&b.1.tier))
+            });
+            for (us, cand) in &ranked {
+                if tracker.fits(req, cand) {
+                    tracker.commit(req, cand);
+                    schedule.slots[i] = Some(Assignment {
+                        request: req.id,
+                        candidate: *cand,
+                        us: *us,
+                    });
+                    break;
+                }
+            }
+        }
+        schedule
+    }
+}
+
+impl Scheduler for Gus {
+    fn name(&self) -> &'static str {
+        "gus"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
+        let mut tracker = CapacityTracker::new(inst, self.mode);
+        self.schedule_with_tracker(inst, &mut tracker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::us::validate_schedule;
+    use crate::model::request::Request;
+    use crate::model::server::{Server, ServerClass, ServerId};
+    use crate::model::service::{CatalogParams, Placement, ServiceCatalog, TierId};
+    use crate::model::topology::{Topology, TopologyParams};
+    use crate::util::rng::Rng;
+
+    fn small_instance(n_requests: usize, seed: u64) -> ProblemInstance {
+        let mut rng = Rng::new(seed);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 3, num_tiers: 4, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::random(
+            &catalog,
+            &[
+                ServerClass::EdgeSmall,
+                ServerClass::EdgeMedium,
+                ServerClass::EdgeLarge,
+                ServerClass::Cloud,
+            ],
+            &mut rng,
+        );
+        let requests = (0..n_requests)
+            .map(|i| {
+                Request::new(i, i % 3, i % 3)
+                    .with_qos(rng.uniform(30.0, 60.0), rng.uniform(1200.0, 6000.0))
+                    .with_queue_delay(rng.uniform(0.0, 50.0))
+            })
+            .collect();
+        ProblemInstance::new(topology, catalog, placement, requests)
+    }
+
+    #[test]
+    fn produces_valid_strict_schedule() {
+        let inst = small_instance(20, 1);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        validate_schedule(&inst, &s, ConstraintMode::STRICT).unwrap();
+    }
+
+    #[test]
+    fn all_assignments_meet_qos() {
+        let inst = small_instance(30, 2);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert_eq!(s.satisfied(&inst), s.served());
+    }
+
+    #[test]
+    fn objective_nonnegative_under_strict_mode() {
+        // QoS-feasible candidates always have US >= 0.
+        let inst = small_instance(50, 3);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert!(s.objective() >= 0.0);
+        for a in s.slots.iter().flatten() {
+            assert!(a.us >= 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let inst = small_instance(25, 4);
+        let a = Gus::default().schedule(&inst, &mut Rng::new(0));
+        let b = Gus::default().schedule(&inst, &mut Rng::new(99));
+        for (x, y) in a.slots.iter().zip(b.slots.iter()) {
+            assert_eq!(x.is_some(), y.is_some());
+            if let (Some(x), Some(y)) = (x, y) {
+                assert_eq!(x.candidate.server, y.candidate.server);
+                assert_eq!(x.candidate.tier, y.candidate.tier);
+            }
+        }
+    }
+
+    #[test]
+    fn picks_highest_us_when_capacity_allows() {
+        let inst = small_instance(1, 5);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        let Some(a) = &s.slots[0] else { panic!("request should be served") };
+        // No capacity pressure with a single request: must be the US-max
+        // QoS-feasible candidate.
+        let req = &inst.requests[0];
+        let best = inst
+            .candidates(0)
+            .into_iter()
+            .filter(|c| qos_satisfied(req, c))
+            .map(|c| user_satisfaction(req, &c, inst.max_accuracy_pct, inst.max_completion_ms))
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!((a.us - best).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drops_unsatisfiable_requests() {
+        let mut inst = small_instance(5, 6);
+        for r in &mut inst.requests {
+            r.min_accuracy_pct = 100.0; // nothing reaches 100% exactly
+        }
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert_eq!(s.served(), 0);
+    }
+
+    #[test]
+    fn capacity_exhaustion_forces_drops_or_spill() {
+        // One edge, no cloud: γ bounds how many can be served.
+        let mut rng = Rng::new(7);
+        let topology = Topology::explicit(
+            vec![Server::new(0, ServerClass::EdgeSmall).with_capacities(2.0, 0.0)],
+            vec![vec![0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 1);
+        let requests = (0..5)
+            .map(|i| Request::new(i, 0, 0).with_qos(0.0, 10_000.0))
+            .collect();
+        let inst = ProblemInstance::new(topology, catalog, placement, requests);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        // comp_cost of tier 0 is 1.0, γ=2 → exactly 2 served.
+        assert_eq!(s.served(), 2);
+        validate_schedule(&inst, &s, ConstraintMode::STRICT).unwrap();
+    }
+
+    #[test]
+    fn eta_constraint_blocks_offloading() {
+        // Two servers; covering edge has η=0 → no offload possible.
+        let mut rng = Rng::new(8);
+        let topology = Topology::explicit(
+            vec![
+                Server::new(0, ServerClass::EdgeSmall).with_capacities(0.0, 0.0),
+                Server::new(1, ServerClass::EdgeLarge).with_capacities(10.0, 10.0),
+            ],
+            vec![vec![0.0, 10.0], vec![10.0, 0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 2);
+        let requests = vec![Request::new(0, 0, 0).with_qos(0.0, 10_000.0)];
+        let inst = ProblemInstance::new(topology, catalog, placement, requests);
+        let strict = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert_eq!(strict.served(), 0, "γ=0 locally and η=0 blocks offload");
+        // Happy-Communication relaxes η and can offload.
+        let happy = Gus::with_mode(ConstraintMode::HAPPY_COMMUNICATION)
+            .schedule(&inst, &mut Rng::new(0));
+        assert_eq!(happy.served(), 1);
+        assert_eq!(happy.slots[0].as_ref().unwrap().candidate.server, ServerId(1));
+    }
+
+    #[test]
+    fn priority_wins_contested_capacity() {
+        // One server, γ=1, two identical requests: the high-priority one
+        // must be served even though it is submitted second.
+        let mut rng = Rng::new(10);
+        let topology = Topology::explicit(
+            vec![Server::new(0, ServerClass::EdgeMedium).with_capacities(1.0, 0.0)],
+            vec![vec![0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 1);
+        let requests = vec![
+            Request::new(0, 0, 0).with_qos(0.0, 10_000.0),
+            Request::new(1, 0, 0).with_qos(0.0, 10_000.0).with_priority(5),
+        ];
+        let inst = ProblemInstance::new(topology, catalog, placement, requests);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert!(s.slots[0].is_none(), "best-effort request must yield");
+        assert!(s.slots[1].is_some(), "priority request must be served");
+    }
+
+    #[test]
+    fn tie_break_prefers_local_then_lower_tier() {
+        // Construct two candidates with identical US via identical
+        // profiles; the local one must win.
+        let mut rng = Rng::new(9);
+        let topology = Topology::explicit(
+            vec![
+                Server::new(0, ServerClass::EdgeMedium).with_capacities(10.0, 10.0),
+                Server::new(1, ServerClass::EdgeMedium).with_capacities(10.0, 10.0),
+            ],
+            vec![vec![0.0, 0.0], vec![0.0, 0.0]], // zero comm delay → equal US
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 2);
+        let requests = vec![Request::new(0, 0, 0).with_qos(0.0, 100_000.0)];
+        let mut inst = ProblemInstance::new(topology, catalog, placement, requests);
+        inst = inst.with_normalization(100.0, 12_000.0);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(0));
+        let a = s.slots[0].as_ref().unwrap();
+        assert_eq!(a.candidate.server, ServerId(0), "local preferred on tie");
+        assert_eq!(a.candidate.tier, TierId(0));
+    }
+}

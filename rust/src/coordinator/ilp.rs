@@ -1,0 +1,359 @@
+//! Exact MUS solver: depth-first branch-and-bound over per-request
+//! choices — the stand-in for the paper's CPLEX runs (DESIGN.md
+//! §Substitutions).
+//!
+//! The MUS ILP (Eq. 2) decomposes per request into "pick ≤ 1 candidate";
+//! the coupling is only through the γ/η capacities. B&B explores requests
+//! in a fixed order, trying candidates in descending US (plus the Drop
+//! branch), with:
+//!
+//! * an **admissible bound**: current objective + Σ best-remaining-US per
+//!   request (capacities ignored) — never underestimates, so pruning is
+//!   safe and the search is exact;
+//! * **greedy warm start**: GUS provides the incumbent, which typically
+//!   prunes most of the tree immediately;
+//! * a **node budget**: beyond it the solver returns the best incumbent
+//!   and marks the result inexact (benches keep instances small enough
+//!   that the budget is never hit).
+
+use crate::coordinator::gus::Gus;
+use crate::coordinator::us::{
+    qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
+};
+use crate::coordinator::Scheduler;
+use crate::model::instance::Candidate;
+use crate::model::ProblemInstance;
+use crate::util::rng::Rng;
+
+/// Exact solver configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BranchAndBound {
+    /// Abort after this many explored nodes (safety valve).
+    pub node_budget: u64,
+    pub mode: ConstraintMode,
+}
+
+impl Default for BranchAndBound {
+    fn default() -> Self {
+        BranchAndBound { node_budget: 50_000_000, mode: ConstraintMode::STRICT }
+    }
+}
+
+/// Result of an exact solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub schedule: Schedule,
+    /// True iff the search space was exhausted (solution proven optimal).
+    pub exact: bool,
+    pub nodes: u64,
+}
+
+struct SearchState<'a> {
+    inst: &'a ProblemInstance,
+    /// Per request: QoS-feasible candidates, best US first.
+    options: Vec<Vec<(f64, Candidate)>>,
+    /// `suffix_best[i]` = Σ_{r ≥ i} max US of r (capacity-free bound).
+    suffix_best: Vec<f64>,
+    tracker: CapacityTracker,
+    current: Vec<Option<(f64, Candidate)>>,
+    current_sum: f64,
+    best_sum: f64,
+    best: Vec<Option<(f64, Candidate)>>,
+    nodes: u64,
+    budget: u64,
+    exhausted: bool,
+}
+
+impl<'a> SearchState<'a> {
+    fn dfs(&mut self, i: usize) {
+        self.nodes += 1;
+        if self.nodes > self.budget {
+            self.exhausted = false;
+            return;
+        }
+        if i == self.options.len() {
+            if self.current_sum > self.best_sum + 1e-12 {
+                self.best_sum = self.current_sum;
+                self.best = self.current.clone();
+            }
+            return;
+        }
+        // Bound: even taking the best candidate of every remaining request
+        // cannot beat the incumbent → prune.
+        if self.current_sum + self.suffix_best[i] <= self.best_sum + 1e-12 {
+            return;
+        }
+        // Branch on candidates in descending US.
+        // (options are pre-sorted descending.)
+        let n_opts = self.options[i].len();
+        for oi in 0..n_opts {
+            let (us, cand) = self.options[i][oi];
+            let req = &self.inst.requests[i];
+            if !self.tracker.fits(req, &cand) {
+                continue;
+            }
+            self.tracker.commit(req, &cand);
+            self.current[i] = Some((us, cand));
+            self.current_sum += us;
+            self.dfs(i + 1);
+            self.current_sum -= us;
+            self.current[i] = None;
+            self.tracker.release(req, &cand);
+            if self.nodes > self.budget {
+                return;
+            }
+        }
+        // Drop branch.
+        self.dfs(i + 1);
+    }
+}
+
+impl BranchAndBound {
+    /// Solve to proven optimality (within the node budget).
+    pub fn solve(&self, inst: &ProblemInstance) -> SolveResult {
+        let n = inst.num_requests();
+        let mut options: Vec<Vec<(f64, Candidate)>> = Vec::with_capacity(n);
+        for i in 0..n {
+            let req = &inst.requests[i];
+            let mut opts: Vec<(f64, Candidate)> = inst
+                .candidates(i)
+                .into_iter()
+                .filter(|c| !self.mode.qos || qos_satisfied(req, c))
+                .map(|c| {
+                    (
+                        user_satisfaction(req, &c, inst.max_accuracy_pct, inst.max_completion_ms),
+                        c,
+                    )
+                })
+                // With strict QoS every option has US ≥ 0; under relaxed
+                // QoS, negative-US options can never be optimal (Drop
+                // gives 0), so discard them.
+                .filter(|(us, _)| *us >= 0.0)
+                .collect();
+            opts.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            options.push(opts);
+        }
+        let mut suffix_best = vec![0.0; n + 1];
+        for i in (0..n).rev() {
+            let best = options[i].first().map(|(us, _)| *us).unwrap_or(0.0);
+            suffix_best[i] = suffix_best[i + 1] + best.max(0.0);
+        }
+
+        // Warm start with GUS.
+        let warm = Gus::with_mode(self.mode).schedule(inst, &mut Rng::new(0));
+        let warm_sum: f64 = warm.slots.iter().flatten().map(|a| a.us).sum();
+        let warm_best: Vec<Option<(f64, Candidate)>> = warm
+            .slots
+            .iter()
+            .map(|s| s.as_ref().map(|a| (a.us, a.candidate)))
+            .collect();
+
+        let mut state = SearchState {
+            inst,
+            options,
+            suffix_best,
+            tracker: CapacityTracker::new(inst, self.mode),
+            current: vec![None; n],
+            current_sum: 0.0,
+            best_sum: warm_sum,
+            best: warm_best,
+            nodes: 0,
+            budget: self.node_budget,
+            exhausted: true,
+        };
+        state.dfs(0);
+
+        let mut schedule = Schedule::empty(n);
+        for (i, slot) in state.best.iter().enumerate() {
+            if let Some((us, cand)) = slot {
+                schedule.slots[i] = Some(Assignment {
+                    request: inst.requests[i].id,
+                    candidate: *cand,
+                    us: *us,
+                });
+            }
+        }
+        SolveResult { schedule, exact: state.exhausted, nodes: state.nodes }
+    }
+}
+
+impl Scheduler for BranchAndBound {
+    fn name(&self) -> &'static str {
+        "ilp"
+    }
+
+    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
+        self.solve(inst).schedule
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::us::validate_schedule;
+    use crate::model::request::Request;
+    use crate::model::server::{Server, ServerClass};
+    use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
+    use crate::model::topology::{Topology, TopologyParams};
+
+    fn instance(n: usize, seed: u64) -> ProblemInstance {
+        let mut rng = Rng::new(seed);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 3, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 4);
+        let requests = (0..n)
+            .map(|i| {
+                Request::new(i, i % 3, i % 3)
+                    .with_qos(rng.uniform(30.0, 55.0), rng.uniform(1500.0, 6000.0))
+            })
+            .collect();
+        ProblemInstance::new(topology, catalog, placement, requests)
+    }
+
+    #[test]
+    fn exact_on_small_instances() {
+        let inst = instance(6, 1);
+        let r = BranchAndBound::default().solve(&inst);
+        assert!(r.exact);
+        validate_schedule(&inst, &r.schedule, ConstraintMode::STRICT).unwrap();
+    }
+
+    #[test]
+    fn optimal_at_least_gus() {
+        for seed in 1..8 {
+            let inst = instance(8, seed);
+            let opt = BranchAndBound::default().solve(&inst);
+            let gus = Gus::default().schedule(&inst, &mut Rng::new(0));
+            assert!(
+                opt.schedule.objective() >= gus.objective() - 1e-9,
+                "seed {seed}: opt {} < gus {}",
+                opt.schedule.objective(),
+                gus.objective()
+            );
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_tiny() {
+        // 3 requests, exhaustive cross-check against full enumeration.
+        let inst = instance(3, 3);
+        let opt = BranchAndBound::default().solve(&inst);
+        assert!(opt.exact);
+
+        // Brute force.
+        let opts: Vec<Vec<(f64, crate::model::instance::Candidate)>> = (0..3)
+            .map(|i| {
+                let req = &inst.requests[i];
+                inst.candidates(i)
+                    .into_iter()
+                    .filter(|c| qos_satisfied(req, c))
+                    .map(|c| {
+                        (
+                            user_satisfaction(
+                                req,
+                                &c,
+                                inst.max_accuracy_pct,
+                                inst.max_completion_ms,
+                            ),
+                            c,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut best = 0.0f64;
+        let choices: Vec<isize> = vec![-1; 3];
+        fn rec(
+            inst: &ProblemInstance,
+            opts: &[Vec<(f64, crate::model::instance::Candidate)>],
+            choices: &mut Vec<isize>,
+            i: usize,
+            best: &mut f64,
+        ) {
+            if i == opts.len() {
+                // Check capacities.
+                let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+                let mut sum = 0.0;
+                for (r, &c) in choices.iter().enumerate() {
+                    if c >= 0 {
+                        let (us, cand) = opts[r][c as usize];
+                        let req = &inst.requests[r];
+                        if !tracker.fits(req, &cand) {
+                            return;
+                        }
+                        tracker.commit(req, &cand);
+                        sum += us;
+                    }
+                }
+                if sum > *best {
+                    *best = sum;
+                }
+                return;
+            }
+            for c in -1..opts[i].len() as isize {
+                choices[i] = c;
+                rec(inst, opts, choices, i + 1, best);
+            }
+        }
+        rec(&inst, &opts, &mut choices.clone(), 0, &mut best);
+        let got: f64 = opt.schedule.slots.iter().flatten().map(|a| a.us).sum();
+        assert!((got - best).abs() < 1e-9, "bb {got} vs brute {best}");
+    }
+
+    #[test]
+    fn node_budget_marks_inexact() {
+        // Capacity-tight instance: the capacity-free bound cannot prove
+        // the warm start optimal at the root, so the search must actually
+        // explore — and trip the tiny node budget.
+        let mut rng = Rng::new(4);
+        let topology = Topology::explicit(
+            vec![Server::new(0, ServerClass::EdgeMedium).with_capacities(3.0, 0.0)],
+            vec![vec![0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 2, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 1);
+        let requests = (0..12)
+            .map(|i| Request::new(i, 0, 0).with_qos(0.0, 3000.0 + 500.0 * i as f64))
+            .collect();
+        let inst = ProblemInstance::new(topology, catalog, placement, requests);
+        let r = BranchAndBound { node_budget: 5, mode: ConstraintMode::STRICT }.solve(&inst);
+        assert!(!r.exact);
+        // Still returns the GUS warm start at minimum.
+        let gus = Gus::default().schedule(&inst, &mut Rng::new(0));
+        assert!(r.schedule.objective() >= gus.objective() - 1e-12);
+    }
+
+    #[test]
+    fn capacity_coupled_instance_requires_drop() {
+        // Single server, γ=1: only one of two requests can be served —
+        // B&B must pick the higher-US one.
+        let mut rng = Rng::new(5);
+        let topology = Topology::explicit(
+            vec![Server::new(0, ServerClass::EdgeMedium).with_capacities(1.0, 0.0)],
+            vec![vec![0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 1);
+        let requests = vec![
+            Request::new(0, 0, 0).with_qos(0.0, 2000.0),
+            Request::new(1, 0, 0).with_qos(0.0, 9000.0), // larger slack → higher US
+        ];
+        let inst = ProblemInstance::new(topology, catalog, placement, requests);
+        let r = BranchAndBound::default().solve(&inst);
+        assert!(r.exact);
+        assert!(r.schedule.slots[0].is_none());
+        assert!(r.schedule.slots[1].is_some());
+    }
+}

@@ -1,0 +1,83 @@
+//! The paper's L3 contribution: scheduling/offloading decisions that
+//! maximize user satisfaction (the MUS problem).
+//!
+//! * [`us`] — the User-Satisfaction metric (Def. II.1), schedules,
+//!   capacity tracking, and schedule validation (the ILP constraints);
+//! * [`gus`] — the proposed greedy GUS algorithm (Algorithm 1);
+//! * [`baselines`] — the five comparison heuristics from §IV;
+//! * [`ilp`] — an exact branch-and-bound solver standing in for CPLEX
+//!   (see DESIGN.md §Substitutions).
+
+pub mod baselines;
+pub mod gus;
+pub mod ilp;
+pub mod us;
+
+use crate::model::ProblemInstance;
+use crate::util::rng::Rng;
+pub use us::{Assignment, CapacityTracker, ConstraintMode, Schedule};
+
+/// A scheduling policy: produces a full [`Schedule`] for one decision
+/// frame. `rng` makes stochastic policies (Random-Assignment) and
+/// tie-breaking reproducible.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule;
+}
+
+/// Every scheduler the evaluation compares, in the paper's order.
+pub fn all_schedulers() -> Vec<Box<dyn Scheduler + Send + Sync>> {
+    vec![
+        Box::new(gus::Gus::default()),
+        Box::new(baselines::RandomAssignment),
+        Box::new(baselines::OffloadAll),
+        Box::new(baselines::LocalAll),
+        Box::new(baselines::HappyComputation),
+        Box::new(baselines::HappyCommunication),
+    ]
+}
+
+/// Look a scheduler up by CLI name.
+pub fn scheduler_by_name(name: &str) -> Option<Box<dyn Scheduler + Send + Sync>> {
+    match name {
+        "gus" => Some(Box::new(gus::Gus::default())),
+        "random" => Some(Box::new(baselines::RandomAssignment)),
+        "offload-all" | "offload_all" => Some(Box::new(baselines::OffloadAll)),
+        "local-all" | "local_all" => Some(Box::new(baselines::LocalAll)),
+        "happy-computation" | "happy_computation" => Some(Box::new(baselines::HappyComputation)),
+        "happy-communication" | "happy_communication" => {
+            Some(Box::new(baselines::HappyCommunication))
+        }
+        "gus-soft" | "gus_soft" => {
+            Some(Box::new(gus::Gus::with_mode(ConstraintMode::SOFT_QOS)))
+        }
+        "ilp" | "optimal" => Some(Box::new(ilp::BranchAndBound::default())),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_six_policies() {
+        assert_eq!(all_schedulers().len(), 6);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in [
+            "gus",
+            "random",
+            "offload-all",
+            "local-all",
+            "happy-computation",
+            "happy-communication",
+            "ilp",
+        ] {
+            assert!(scheduler_by_name(n).is_some(), "{n} missing");
+        }
+        assert!(scheduler_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,341 @@
+//! User Satisfaction (Def. II.1), schedules, residual-capacity tracking,
+//! and full validation of the MUS ILP constraints (2a)–(2f).
+
+use crate::model::instance::Candidate;
+use crate::model::request::{Request, RequestId};
+use crate::model::ProblemInstance;
+
+/// `US_ijkl = w_a (a - A_i)/Max_as + w_c (C_i - c)/Max_cs` — Eq. (1).
+///
+/// Positive for any candidate meeting both QoS thresholds; may be negative
+/// in the paper's "special case" where the thresholds are suggestions.
+#[inline]
+pub fn user_satisfaction(req: &Request, cand: &Candidate, max_as: f64, max_cs: f64) -> f64 {
+    req.w_accuracy * (cand.accuracy_pct - req.min_accuracy_pct) / max_as
+        + req.w_completion * (req.max_completion_ms - cand.completion_ms) / max_cs
+}
+
+/// Hard QoS feasibility: constraints (2b) and (2c).
+#[inline]
+pub fn qos_satisfied(req: &Request, cand: &Candidate) -> bool {
+    cand.accuracy_pct >= req.min_accuracy_pct && cand.completion_ms <= req.max_completion_ms
+}
+
+/// Which capacity constraints a policy enforces — the Happy-* baselines
+/// relax one each (§IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConstraintMode {
+    /// Enforce computation capacity (2d).
+    pub computation: bool,
+    /// Enforce communication capacity (2e).
+    pub communication: bool,
+    /// Enforce the QoS thresholds (2b)/(2c) as hard constraints; false is
+    /// the paper's relaxed "special case".
+    pub qos: bool,
+}
+
+impl ConstraintMode {
+    pub const STRICT: ConstraintMode =
+        ConstraintMode { computation: true, communication: true, qos: true };
+    pub const HAPPY_COMPUTATION: ConstraintMode =
+        ConstraintMode { computation: false, communication: true, qos: true };
+    pub const HAPPY_COMMUNICATION: ConstraintMode =
+        ConstraintMode { computation: true, communication: false, qos: true };
+    /// The paper's §II "special case": QoS thresholds are suggestions,
+    /// not hard constraints (2b)/(2c) relaxed; capacities still bind.
+    pub const SOFT_QOS: ConstraintMode =
+        ConstraintMode { computation: true, communication: true, qos: false };
+}
+
+/// One committed decision: request i → (server j, tier l).
+#[derive(Clone, Copy, Debug)]
+pub struct Assignment {
+    pub request: RequestId,
+    pub candidate: Candidate,
+    /// Cached US of this assignment.
+    pub us: f64,
+}
+
+/// Where a request ended up — drives Fig. 1(f)–(h).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecisionKind {
+    Local,
+    OffloadCloud,
+    OffloadPeer,
+    Dropped,
+}
+
+/// A complete decision vector for one frame: `slots[i]` is request i's
+/// assignment, `None` = dropped (constraint 2a allows ≤ 1 assignment).
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub slots: Vec<Option<Assignment>>,
+}
+
+impl Schedule {
+    pub fn empty(n: usize) -> Schedule {
+        Schedule { slots: vec![None; n] }
+    }
+
+    pub fn served(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.slots.len() - self.served()
+    }
+
+    /// The MUS objective (Eq. 2): mean US over all requests (dropped
+    /// requests contribute 0).
+    pub fn objective(&self) -> f64 {
+        if self.slots.is_empty() {
+            return 0.0;
+        }
+        self.slots
+            .iter()
+            .flatten()
+            .map(|a| a.us)
+            .sum::<f64>()
+            / self.slots.len() as f64
+    }
+
+    /// Requests whose assignment meets both QoS thresholds.
+    pub fn satisfied(&self, inst: &ProblemInstance) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|a| qos_satisfied(&inst.requests[a.request.0], &a.candidate))
+            .count()
+    }
+
+    pub fn satisfied_pct(&self, inst: &ProblemInstance) -> f64 {
+        if self.slots.is_empty() {
+            return 0.0;
+        }
+        100.0 * self.satisfied(inst) as f64 / self.slots.len() as f64
+    }
+
+    pub fn kind(&self, i: usize, inst: &ProblemInstance) -> DecisionKind {
+        match &self.slots[i] {
+            None => DecisionKind::Dropped,
+            Some(a) => {
+                if !a.candidate.offloaded {
+                    DecisionKind::Local
+                } else if inst.topology.server(a.candidate.server).is_cloud() {
+                    DecisionKind::OffloadCloud
+                } else {
+                    DecisionKind::OffloadPeer
+                }
+            }
+        }
+    }
+
+    /// Decision mix in percent of all requests: (local, cloud, peer, drop).
+    pub fn decision_mix_pct(&self, inst: &ProblemInstance) -> [f64; 4] {
+        let n = self.slots.len().max(1) as f64;
+        let mut counts = [0usize; 4];
+        for i in 0..self.slots.len() {
+            let idx = match self.kind(i, inst) {
+                DecisionKind::Local => 0,
+                DecisionKind::OffloadCloud => 1,
+                DecisionKind::OffloadPeer => 2,
+                DecisionKind::Dropped => 3,
+            };
+            counts[idx] += 1;
+        }
+        [
+            100.0 * counts[0] as f64 / n,
+            100.0 * counts[1] as f64 / n,
+            100.0 * counts[2] as f64 / n,
+            100.0 * counts[3] as f64 / n,
+        ]
+    }
+}
+
+/// Residual γ/η tracking while a schedule is being built; mirrors the
+/// "update remaining capacity" steps of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct CapacityTracker {
+    pub gamma: Vec<f64>,
+    pub eta: Vec<f64>,
+    mode: ConstraintMode,
+}
+
+impl CapacityTracker {
+    pub fn new(inst: &ProblemInstance, mode: ConstraintMode) -> CapacityTracker {
+        CapacityTracker {
+            gamma: inst.topology.servers.iter().map(|s| s.gamma).collect(),
+            eta: inst.topology.servers.iter().map(|s| s.eta).collect(),
+            mode,
+        }
+    }
+
+    /// Would serving `req` via `cand` fit the residual capacities?
+    /// Computation (2d) is charged at the serving server; communication
+    /// (2e) at the covering server, only when offloading.
+    pub fn fits(&self, req: &Request, cand: &Candidate) -> bool {
+        if self.mode.computation && self.gamma[cand.server.0] < cand.comp_cost - 1e-12 {
+            return false;
+        }
+        if self.mode.communication
+            && cand.offloaded
+            && self.eta[req.covering.0] < cand.comm_cost - 1e-12
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Commit the assignment, consuming capacity.
+    pub fn commit(&mut self, req: &Request, cand: &Candidate) {
+        debug_assert!(self.fits(req, cand));
+        self.gamma[cand.server.0] -= cand.comp_cost;
+        if cand.offloaded {
+            self.eta[req.covering.0] -= cand.comm_cost;
+        }
+    }
+
+    /// Release a previously committed assignment (used by B&B backtracking).
+    pub fn release(&mut self, req: &Request, cand: &Candidate) {
+        self.gamma[cand.server.0] += cand.comp_cost;
+        if cand.offloaded {
+            self.eta[req.covering.0] += cand.comm_cost;
+        }
+    }
+}
+
+/// Full check of the ILP constraints (2a)–(2f) over a finished schedule.
+/// `mode` mirrors what the producing policy was allowed to relax.
+pub fn validate_schedule(
+    inst: &ProblemInstance,
+    schedule: &Schedule,
+    mode: ConstraintMode,
+) -> Result<(), String> {
+    if schedule.slots.len() != inst.num_requests() {
+        return Err(format!(
+            "schedule covers {} requests, instance has {}",
+            schedule.slots.len(),
+            inst.num_requests()
+        ));
+    }
+    let mut gamma_used = vec![0.0; inst.num_servers()];
+    let mut eta_used = vec![0.0; inst.num_servers()];
+    for (i, slot) in schedule.slots.iter().enumerate() {
+        let Some(a) = slot else { continue };
+        if a.request.0 != i {
+            return Err(format!("slot {i} holds assignment for request {}", a.request.0));
+        }
+        let req = &inst.requests[i];
+        let cand = &a.candidate;
+        // (2f): server/tier must exist and be placed.
+        if cand.server.0 >= inst.num_servers() {
+            return Err(format!("request {i} assigned to unknown server"));
+        }
+        if !inst.placement.has(cand.server.0, req.service, cand.tier) {
+            return Err(format!("request {i}: model not placed on {}", cand.server));
+        }
+        // (2b)/(2c).
+        if mode.qos && !qos_satisfied(req, cand) {
+            return Err(format!(
+                "request {i}: QoS violated (a={:.1} A={:.1}, c={:.0} C={:.0})",
+                cand.accuracy_pct, req.min_accuracy_pct, cand.completion_ms, req.max_completion_ms
+            ));
+        }
+        // Consistency of the cached candidate numbers with the instance.
+        let expect_c = inst.completion_ms(req, cand.server, cand.tier);
+        if (expect_c - cand.completion_ms).abs() > 1e-6 {
+            return Err(format!(
+                "request {i}: stale completion time {} vs {}",
+                cand.completion_ms, expect_c
+            ));
+        }
+        gamma_used[cand.server.0] += cand.comp_cost;
+        if cand.offloaded {
+            eta_used[req.covering.0] += cand.comm_cost;
+        }
+    }
+    for j in 0..inst.num_servers() {
+        let s = &inst.topology.servers[j];
+        if mode.computation && gamma_used[j] > s.gamma + 1e-9 {
+            return Err(format!("server {j}: γ exceeded ({} > {})", gamma_used[j], s.gamma));
+        }
+        if mode.communication && eta_used[j] > s.eta + 1e-9 {
+            return Err(format!("server {j}: η exceeded ({} > {})", eta_used[j], s.eta));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::ServerId;
+    use crate::model::service::TierId;
+
+    fn req() -> Request {
+        Request::new(0, 0, 0).with_qos(50.0, 2000.0)
+    }
+
+    fn cand(acc: f64, comp: f64) -> Candidate {
+        Candidate {
+            server: ServerId(1),
+            tier: TierId(0),
+            accuracy_pct: acc,
+            completion_ms: comp,
+            comp_cost: 1.0,
+            comm_cost: 1.0,
+            offloaded: true,
+        }
+    }
+
+    #[test]
+    fn us_formula_matches_paper() {
+        // w_a (a - A)/Max_as + w_c (C - c)/Max_cs
+        let r = req();
+        let c = cand(70.0, 1500.0);
+        let us = user_satisfaction(&r, &c, 100.0, 12_000.0);
+        let expect = (70.0 - 50.0) / 100.0 + (2000.0 - 1500.0) / 12_000.0;
+        assert!((us - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn us_weights_scale_terms() {
+        let r = req().with_weights(0.5, 0.0);
+        let c = cand(70.0, 1500.0);
+        let us = user_satisfaction(&r, &c, 100.0, 12_000.0);
+        assert!((us - 0.5 * 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qos_boundary_inclusive() {
+        let r = req();
+        assert!(qos_satisfied(&r, &cand(50.0, 2000.0)));
+        assert!(!qos_satisfied(&r, &cand(49.99, 2000.0)));
+        assert!(!qos_satisfied(&r, &cand(50.0, 2000.01)));
+    }
+
+    #[test]
+    fn us_positive_iff_qos_met_with_full_weights() {
+        let r = req();
+        let good = cand(55.0, 1800.0);
+        assert!(qos_satisfied(&r, &good));
+        assert!(user_satisfaction(&r, &good, 100.0, 12_000.0) > 0.0);
+        let bad = cand(40.0, 5000.0);
+        assert!(user_satisfaction(&r, &bad, 100.0, 12_000.0) < 0.0);
+    }
+
+    #[test]
+    fn objective_averages_over_all_requests() {
+        let mut s = Schedule::empty(4);
+        s.slots[0] = Some(Assignment { request: RequestId(0), candidate: cand(60.0, 100.0), us: 0.4 });
+        s.slots[2] = Some(Assignment { request: RequestId(2), candidate: cand(60.0, 100.0), us: 0.2 });
+        assert!((s.objective() - 0.15).abs() < 1e-12);
+        assert_eq!(s.served(), 2);
+        assert_eq!(s.dropped(), 2);
+    }
+
+    #[test]
+    fn empty_schedule_objective_zero() {
+        assert_eq!(Schedule::empty(0).objective(), 0.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Figure-regeneration harness: every panel of the paper's Fig. 1 plus
+//! the in-text GUS-vs-optimal comparison, as parameter sweeps that print
+//! the same series the paper plots. See DESIGN.md §Experiment-index.
+//!
+//! Numerical panels (a–d) sweep one workload parameter of the §IV
+//! Monte-Carlo setup; testbed panels (e–h) are produced by
+//! `serving::experiment` over the live serving runtime and re-exported
+//! here for the benches.
+
+use crate::coordinator::gus::Gus;
+use crate::coordinator::ilp::BranchAndBound;
+use crate::coordinator::Scheduler;
+use crate::metrics::Series;
+use crate::model::service::CatalogParams;
+use crate::model::topology::TopologyParams;
+use crate::sim::{MonteCarlo, PolicyStats};
+use crate::util::rng::Rng;
+use crate::workload::{build_instance, ScenarioParams, WorkloadParams};
+
+/// The numerical panels of Fig. 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumericalFigure {
+    /// (a) satisfied % vs requested-delay mean.
+    Fig1a,
+    /// (b) satisfied % vs requested-accuracy mean.
+    Fig1b,
+    /// (c) satisfied % vs number of requests.
+    Fig1c,
+    /// (d) satisfied % vs admission-queue delay bound.
+    Fig1d,
+}
+
+impl NumericalFigure {
+    pub fn parse(s: &str) -> Option<NumericalFigure> {
+        match s {
+            "fig1a" | "a" => Some(NumericalFigure::Fig1a),
+            "fig1b" | "b" => Some(NumericalFigure::Fig1b),
+            "fig1c" | "c" => Some(NumericalFigure::Fig1c),
+            "fig1d" | "d" => Some(NumericalFigure::Fig1d),
+            _ => None,
+        }
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            NumericalFigure::Fig1a => "fig1a",
+            NumericalFigure::Fig1b => "fig1b",
+            NumericalFigure::Fig1c => "fig1c",
+            NumericalFigure::Fig1d => "fig1d",
+        }
+    }
+
+    /// The swept x values (paper-plausible ranges).
+    pub fn default_sweep(&self) -> Vec<f64> {
+        match self {
+            NumericalFigure::Fig1a => vec![500.0, 1000.0, 2000.0, 3000.0, 4000.0, 6000.0, 8000.0],
+            NumericalFigure::Fig1b => vec![30.0, 40.0, 45.0, 50.0, 60.0, 70.0, 80.0],
+            NumericalFigure::Fig1c => vec![25.0, 50.0, 100.0, 150.0, 200.0, 300.0],
+            NumericalFigure::Fig1d => vec![0.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2000.0],
+        }
+    }
+
+    pub fn x_label(&self) -> &'static str {
+        match self {
+            NumericalFigure::Fig1a => "requested delay mean (ms)",
+            NumericalFigure::Fig1b => "requested accuracy mean (%)",
+            NumericalFigure::Fig1c => "number of requests",
+            NumericalFigure::Fig1d => "max queue delay (ms)",
+        }
+    }
+
+    /// Apply one sweep value to the scenario.
+    pub fn apply(&self, scenario: &mut ScenarioParams, x: f64) {
+        match self {
+            NumericalFigure::Fig1a => scenario.workload.deadline_mean_ms = x,
+            NumericalFigure::Fig1b => scenario.workload.accuracy_mean_pct = x,
+            NumericalFigure::Fig1c => scenario.workload.num_requests = x as usize,
+            NumericalFigure::Fig1d => scenario.workload.queue_delay_max_ms = x,
+        }
+    }
+}
+
+/// Configuration of a numerical-figure run.
+#[derive(Clone, Debug)]
+pub struct NumericalConfig {
+    pub base: ScenarioParams,
+    pub runs: usize,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for NumericalConfig {
+    fn default() -> Self {
+        NumericalConfig {
+            base: ScenarioParams::default(),
+            runs: 500,
+            seed: 7,
+            threads: crate::sim::montecarlo::default_threads(),
+        }
+    }
+}
+
+impl NumericalConfig {
+    /// A reduced-size config for smoke tests / CI.
+    pub fn quick() -> NumericalConfig {
+        NumericalConfig {
+            base: ScenarioParams {
+                topology: TopologyParams { num_edge: 4, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 10, num_tiers: 4, ..Default::default() },
+                workload: WorkloadParams { num_requests: 30, ..Default::default() },
+            },
+            runs: 12,
+            seed: 3,
+            threads: 4,
+        }
+    }
+}
+
+/// Run one numerical panel: sweep x, Monte-Carlo each point, collect the
+/// satisfied-% series per policy.
+pub fn run_numerical(figure: NumericalFigure, cfg: &NumericalConfig) -> Series {
+    run_numerical_sweep(figure, cfg, &figure.default_sweep())
+}
+
+pub fn run_numerical_sweep(
+    figure: NumericalFigure,
+    cfg: &NumericalConfig,
+    sweep: &[f64],
+) -> Series {
+    let mut per_policy: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
+    for &x in sweep {
+        let mut scenario = cfg.base.clone();
+        figure.apply(&mut scenario, x);
+        let mc = MonteCarlo {
+            scenario,
+            runs: cfg.runs,
+            base_seed: cfg.seed,
+            threads: cfg.threads,
+        };
+        let stats = mc.run();
+        record_point(&mut per_policy, &stats);
+    }
+    let mut series = Series::new(figure.x_label(), "satisfied users (%)", sweep.to_vec());
+    for (name, ys, cis) in per_policy {
+        series.push_policy(&name, ys, cis);
+    }
+    series
+}
+
+fn record_point(per_policy: &mut Vec<(String, Vec<f64>, Vec<f64>)>, stats: &[PolicyStats]) {
+    if per_policy.is_empty() {
+        for s in stats {
+            per_policy.push((s.name.clone(), Vec::new(), Vec::new()));
+        }
+    }
+    for (slot, s) in per_policy.iter_mut().zip(stats.iter()) {
+        debug_assert_eq!(slot.0, s.name);
+        slot.1.push(s.satisfied_pct.mean());
+        slot.2.push(s.satisfied_pct.ci95());
+    }
+}
+
+/// The in-text claim: GUS attains ~90% of the CPLEX optimum on small
+/// cases. Sweeps instance size; reports mean GUS/OPT objective ratio
+/// (only over instances where OPT > 0) plus both absolute objectives.
+pub struct OptimalGapResult {
+    pub series: Series,
+    /// Overall mean ratio across all sizes/instances.
+    pub mean_ratio: f64,
+    /// Fraction of instances proven exact by the B&B.
+    pub exact_fraction: f64,
+}
+
+pub fn run_optimal_gap(sizes: &[usize], instances_per_size: usize, seed: u64) -> OptimalGapResult {
+    let mut xs = Vec::new();
+    let mut ratio_ys = Vec::new();
+    let mut ratio_cis = Vec::new();
+    let mut gus_ys = Vec::new();
+    let mut opt_ys = Vec::new();
+    let mut all_ratios = crate::util::stats::Accumulator::new();
+    let mut exact = 0u64;
+    let mut total = 0u64;
+    for &n in sizes {
+        let mut ratios = crate::util::stats::Accumulator::new();
+        let mut gus_acc = crate::util::stats::Accumulator::new();
+        let mut opt_acc = crate::util::stats::Accumulator::new();
+        for i in 0..instances_per_size {
+            let mut rng = Rng::new(seed ^ ((n as u64) << 32) ^ i as u64);
+            let scenario = ScenarioParams {
+                topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+                workload: WorkloadParams {
+                    num_requests: n,
+                    // Generous deadlines so feasibility is decided by the
+                    // capacities, not the QoS thresholds.
+                    deadline_mean_ms: 6_000.0,
+                    deadline_std_ms: 2_000.0,
+                    ..Default::default()
+                },
+            };
+            let mut inst = build_instance(&scenario, &mut rng);
+            // Tighten capacities so requests genuinely compete: with the
+            // class defaults the greedy is trivially optimal (the paper's
+            // CPLEX comparison likewise used constrained small cases).
+            for s in &mut inst.topology.servers {
+                s.gamma = if s.is_cloud() { (n as f64 / 3.0).max(2.0) } else { 2.0 };
+                s.eta = 2.0;
+            }
+            let opt = BranchAndBound::default().solve(&inst);
+            let gus = Gus::default().schedule(&inst, &mut rng);
+            total += 1;
+            if opt.exact {
+                exact += 1;
+            }
+            let o = opt.schedule.objective();
+            let g = gus.objective();
+            gus_acc.push(g);
+            opt_acc.push(o);
+            if o > 1e-9 {
+                let r = (g / o).min(1.0);
+                ratios.push(r);
+                all_ratios.push(r);
+            }
+        }
+        xs.push(n as f64);
+        ratio_ys.push(ratios.mean());
+        ratio_cis.push(ratios.ci95());
+        gus_ys.push(gus_acc.mean());
+        opt_ys.push(opt_acc.mean());
+    }
+    let nan = vec![f64::NAN; xs.len()];
+    let mut series = Series::new("requests (N)", "GUS/OPT objective ratio", xs);
+    series.push_policy("gus/opt", ratio_ys, ratio_cis);
+    series.push_policy("gus objective", gus_ys, nan.clone());
+    series.push_policy("opt objective", opt_ys, nan);
+    OptimalGapResult {
+        series,
+        mean_ratio: all_ratios.mean(),
+        exact_fraction: exact as f64 / total.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ids() {
+        assert_eq!(NumericalFigure::parse("fig1a"), Some(NumericalFigure::Fig1a));
+        assert_eq!(NumericalFigure::parse("d"), Some(NumericalFigure::Fig1d));
+        assert_eq!(NumericalFigure::parse("fig1e"), None);
+    }
+
+    #[test]
+    fn apply_hits_right_knob() {
+        let mut s = ScenarioParams::default();
+        NumericalFigure::Fig1a.apply(&mut s, 1234.0);
+        assert_eq!(s.workload.deadline_mean_ms, 1234.0);
+        NumericalFigure::Fig1b.apply(&mut s, 66.0);
+        assert_eq!(s.workload.accuracy_mean_pct, 66.0);
+        NumericalFigure::Fig1c.apply(&mut s, 77.0);
+        assert_eq!(s.workload.num_requests, 77);
+        NumericalFigure::Fig1d.apply(&mut s, 88.0);
+        assert_eq!(s.workload.queue_delay_max_ms, 88.0);
+    }
+
+    #[test]
+    fn quick_sweep_produces_series() {
+        let cfg = NumericalConfig::quick();
+        let series = run_numerical_sweep(NumericalFigure::Fig1c, &cfg, &[20.0, 40.0]);
+        assert_eq!(series.xs, vec![20.0, 40.0]);
+        assert_eq!(series.policies.len(), 6);
+        for (_, ys, _) in &series.policies {
+            assert_eq!(ys.len(), 2);
+            assert!(ys.iter().all(|y| (0.0..=100.0).contains(y)));
+        }
+    }
+
+    #[test]
+    fn fig1a_satisfaction_increases_with_deadline_for_gus() {
+        let cfg = NumericalConfig::quick();
+        let series = run_numerical_sweep(NumericalFigure::Fig1a, &cfg, &[500.0, 8000.0]);
+        let gus = &series.policies.iter().find(|(n, _, _)| n == "gus").unwrap().1;
+        assert!(gus[1] > gus[0], "more delay budget must help: {gus:?}");
+    }
+
+    #[test]
+    fn optimal_gap_near_one_on_small() {
+        let r = run_optimal_gap(&[3, 5], 4, 11);
+        assert!(r.exact_fraction > 0.99);
+        assert!(r.mean_ratio > 0.8, "greedy should be near-optimal, got {}", r.mean_ratio);
+        assert!(r.mean_ratio <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,63 @@
+//! # edgeus — Optimal Accuracy-Time Trade-off for DL Services at the Edge
+//!
+//! A production-shaped reproduction of Hosseinzadeh et al., *"Optimal
+//! Accuracy-Time Trade-off for Deep Learning Services in Edge Computing
+//! Systems"* (2020), as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the MUS user-satisfaction
+//!   model, the GUS greedy scheduler, five baseline heuristics, an exact
+//!   branch-and-bound solver, the Monte-Carlo numerical harness, and a
+//!   live serving runtime (admission queues → periodic decisions →
+//!   dispatch → real model execution).
+//! * **L2** — EdgeNet, a JAX CNN family with accuracy tiers
+//!   (`python/compile/model.py`), AOT-lowered to HLO text artifacts.
+//! * **L1** — a Pallas tiled GEMM kernel
+//!   (`python/compile/kernels/matmul.py`) carrying all model FLOPs.
+//!
+//! Python never runs on the request path: `runtime` loads the compiled
+//! artifacts through PJRT and `serving` drives them from rust threads.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use edgeus::prelude::*;
+//!
+//! // Draw a paper-default instance and schedule it with GUS.
+//! let mut rng = Rng::new(7);
+//! let inst = build_instance(&ScenarioParams::default(), &mut rng);
+//! let schedule = Gus::default().schedule(&inst, &mut rng);
+//! println!("satisfied: {:.1}%", schedule.satisfied_pct(&inst));
+//! ```
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod net;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Common imports for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::baselines::{
+        HappyCommunication, HappyComputation, LocalAll, OffloadAll, RandomAssignment,
+    };
+    pub use crate::coordinator::gus::Gus;
+    pub use crate::coordinator::ilp::BranchAndBound;
+    pub use crate::coordinator::{
+        all_schedulers, scheduler_by_name, Assignment, CapacityTracker, ConstraintMode, Schedule,
+        Scheduler,
+    };
+    pub use crate::model::{
+        Candidate, Placement, ProblemInstance, Request, Server, ServerClass, ServerId,
+        ServiceCatalog, ServiceId, TierId, Topology,
+    };
+    pub use crate::sim::{MonteCarlo, PolicyStats};
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::{build_instance, ScenarioParams, WorkloadParams};
+}

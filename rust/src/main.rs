@@ -1,0 +1,267 @@
+//! `edgeus` — CLI launcher for the MUS/GUS reproduction.
+//!
+//! ```text
+//! edgeus figure  --id fig1a [--runs 500] [--seed 7] [--csv out.csv]
+//! edgeus testbed [--loads 60,120,240] [--policies gus,random] [--scale 50]
+//! edgeus serve   [--scheduler gus] [--requests 200] [--scale 50]
+//! edgeus optimal-gap [--sizes 4,6,8,10] [--instances 20]
+//! edgeus simulate [--config cfg.json]
+//! edgeus info    [--artifacts artifacts]
+//! ```
+
+use anyhow::{Context, Result};
+use edgeus::config::load_montecarlo;
+use edgeus::figures::{run_numerical, NumericalConfig, NumericalFigure};
+use edgeus::serving::{ServingConfig, ServingSystem, TestbedExperiment};
+use edgeus::sim::MonteCarlo;
+use edgeus::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(true);
+    let result = match args.subcommand.as_deref() {
+        Some("figure") => cmd_figure(&args),
+        Some("testbed") => cmd_testbed(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("optimal-gap") => cmd_optimal_gap(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("des") => cmd_des(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand: {other}");
+            print_usage();
+            std::process::exit(2);
+        }
+        None => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "edgeus — Optimal Accuracy-Time Trade-off for DL Services at the Edge\n\
+         subcommands:\n  \
+         figure --id fig1a|fig1b|fig1c|fig1d [--runs N] [--seed S] [--csv PATH]\n  \
+         testbed [--loads 60,120,240,360] [--policies gus,random,local-all,offload-all]\n          \
+         [--scale 50] [--artifacts DIR]\n  \
+         serve [--scheduler gus] [--requests N] [--scale 50] [--artifacts DIR]\n  \
+         optimal-gap [--sizes 4,6,8,10] [--instances 20] [--seed S]\n  \
+         simulate [--config cfg.json] [--runs N]\n  \
+         des [--rates 1,4,16,64] [--policies gus,local-all] [--horizon-s 60]\n  \
+         trace [--out trace.json] [--rate 4] [--horizon-s 60] | [--stats FILE]\n  \
+         info [--artifacts DIR]"
+    );
+}
+
+fn cmd_des(args: &Args) -> Result<()> {
+    let rates: Vec<f64> = args
+        .get_list("rates")
+        .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+        .unwrap_or_else(|| vec![1.0, 4.0, 16.0, 64.0, 150.0]);
+    let policies = args
+        .get_list("policies")
+        .unwrap_or_else(|| vec!["gus".into(), "random".into(), "local-all".into(), "offload-all".into()]);
+    let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
+    let mut base = edgeus::sim::DesConfig::default();
+    base.horizon_ms = args.get_f64("horizon-s", 60.0) * 1e3;
+    base.seed = args.get_u64("seed", base.seed);
+    eprintln!("discrete-event load sweep: rates {rates:?} req/s over {}s", base.horizon_ms / 1e3);
+    let series = edgeus::sim::des::load_sweep(&base, &policy_refs, &rates);
+    println!("\n# DES — satisfied users (%) vs offered load\n\n{}", series.to_markdown());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, series.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    use edgeus::workload::trace::Trace;
+    if let Some(path) = args.get("stats") {
+        let t = Trace::load(path)?;
+        let horizon = t.records.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+        println!(
+            "trace {path}: {} records over {:.1}s ({:.2} req/s)",
+            t.len(),
+            horizon / 1e3,
+            t.len() as f64 / (horizon / 1e3).max(1e-9)
+        );
+        return Ok(());
+    }
+    let out = args.get_or("out", "trace.json");
+    let mut rng = edgeus::util::rng::Rng::new(args.get_u64("seed", 7));
+    let t = Trace::synthesize(
+        &edgeus::workload::WorkloadParams::default(),
+        args.get_usize("services", 100),
+        args.get_usize("edges", 9),
+        args.get_f64("horizon-s", 60.0) * 1e3,
+        args.get_f64("rate", 4.0),
+        &mut rng,
+    );
+    t.save(out)?;
+    println!("wrote {} records to {out}", t.len());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args.get("id").context("--id fig1a|fig1b|fig1c|fig1d required")?;
+    let figure = NumericalFigure::parse(id).with_context(|| format!("unknown figure {id}"))?;
+    let mut cfg = NumericalConfig::default();
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    eprintln!("running {} with {} Monte-Carlo runs per point...", figure.id(), cfg.runs);
+    let series = run_numerical(figure, &cfg);
+    println!("\n# {} — {}\n", figure.id(), series.y_label);
+    println!("{}", series.to_markdown());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, series.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, series.to_json().pretty())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_testbed(args: &Args) -> Result<()> {
+    let mut exp = TestbedExperiment::default();
+    if let Some(loads) = args.get_list("loads") {
+        exp.loads = loads.iter().map(|s| s.parse().unwrap_or(100)).collect();
+    }
+    if let Some(policies) = args.get_list("policies") {
+        exp.policies = policies;
+    }
+    exp.base.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    exp.base.time_scale = args.get_f64("scale", exp.base.time_scale);
+    exp.base.seed = args.get_u64("seed", exp.base.seed);
+    eprintln!(
+        "testbed sweep: loads {:?}, policies {:?} (time scale {}x)",
+        exp.loads, exp.policies, exp.base.time_scale
+    );
+    let result = exp.run()?;
+    for (panel, series) in [
+        ("fig1e — satisfied users (%)", &result.satisfied),
+        ("fig1f — locally processed (%)", &result.local),
+        ("fig1g — offloaded to cloud (%)", &result.cloud),
+        ("fig1h — offloaded to peer edges (%)", &result.peer),
+    ] {
+        println!("\n# {panel}\n\n{}", series.to_markdown());
+    }
+    if let Some(path) = args.get("csv") {
+        let mut out = String::new();
+        for (name, s) in [
+            ("fig1e", &result.satisfied),
+            ("fig1f", &result.local),
+            ("fig1g", &result.cloud),
+            ("fig1h", &result.peer),
+        ] {
+            out.push_str(&format!("# {name}\n{}\n", s.to_csv()));
+        }
+        std::fs::write(path, out)?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServingConfig::default();
+    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
+    cfg.scheduler = args.get_or("scheduler", "gus").to_string();
+    cfg.total_requests = args.get_usize("requests", cfg.total_requests);
+    cfg.time_scale = args.get_f64("scale", cfg.time_scale);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.deadline_ms = args.get_f64("deadline-ms", cfg.deadline_ms);
+    cfg.min_accuracy_pct = args.get_f64("min-accuracy", cfg.min_accuracy_pct);
+    eprintln!(
+        "serving {} requests with {} (time scale {}x)...",
+        cfg.total_requests, cfg.scheduler, cfg.time_scale
+    );
+    let metrics = ServingSystem::new(cfg)?.run()?;
+    println!("{}", metrics.summary_markdown());
+    Ok(())
+}
+
+fn cmd_optimal_gap(args: &Args) -> Result<()> {
+    let sizes: Vec<usize> = args
+        .get_list("sizes")
+        .unwrap_or_else(|| vec!["4".into(), "6".into(), "8".into(), "10".into()])
+        .iter()
+        .map(|s| s.parse().unwrap_or(6))
+        .collect();
+    let instances = args.get_usize("instances", 20);
+    let seed = args.get_u64("seed", 7);
+    eprintln!("optimal-gap: sizes {sizes:?}, {instances} instances each");
+    let result = edgeus::figures::run_optimal_gap(&sizes, instances, seed);
+    println!("\n# GUS vs optimal (B&B)\n\n{}", result.series.to_markdown());
+    println!(
+        "mean GUS/OPT ratio: {:.3} (paper reports ~0.90); exact solves: {:.0}%",
+        result.mean_ratio,
+        100.0 * result.exact_fraction
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mc: MonteCarlo = match args.get("config") {
+        Some(path) => load_montecarlo(path)?,
+        None => MonteCarlo::default(),
+    };
+    let mc = MonteCarlo {
+        runs: args.get_usize("runs", mc.runs),
+        base_seed: args.get_u64("seed", mc.base_seed),
+        threads: args.get_usize("threads", mc.threads),
+        scenario: mc.scenario,
+    };
+    eprintln!("simulating {} Monte-Carlo runs...", mc.runs);
+    let stats = mc.run();
+    println!("| policy | satisfied % | served % | objective | local/cloud/peer/drop % |");
+    println!("|---|---|---|---|---|");
+    for s in &stats {
+        println!(
+            "| {} | {:.2} ±{:.2} | {:.2} | {:.4} | {:.0}/{:.0}/{:.0}/{:.0} |",
+            s.name,
+            s.satisfied_pct.mean(),
+            s.satisfied_pct.ci95(),
+            s.served_pct.mean(),
+            s.objective.mean(),
+            s.mix_local.mean(),
+            s.mix_cloud.mean(),
+            s.mix_peer.mean(),
+            s.mix_dropped.mean(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let manifest = edgeus::runtime::Manifest::load(dir)?;
+    println!(
+        "artifacts in {dir}: {} modules, tiers {:?}",
+        manifest.artifacts.len(),
+        manifest.tiers()
+    );
+    println!("| name | tier | batch | params | flops/image | accuracy % |");
+    println!("|---|---|---|---|---|---|");
+    for a in &manifest.artifacts {
+        println!(
+            "| {} | {} | {} | {} | {} | {:.1} |",
+            a.name, a.tier, a.batch, a.params, a.flops_per_image, a.profile_accuracy_pct
+        );
+    }
+    if args.flag("load") {
+        let engine = edgeus::runtime::InferenceEngine::load(dir)?;
+        println!("\nloaded on {}: {:?}", engine.platform(), engine.artifact_names());
+    } else {
+        println!("\n(pass --load to compile the artifacts on the PJRT client)");
+    }
+    Ok(())
+}

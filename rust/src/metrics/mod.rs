@@ -1,0 +1,257 @@
+//! Metrics & reporting: satisfaction series, latency histograms, and the
+//! table emitters used by the figure-regeneration harness (markdown for
+//! the terminal, CSV/JSON for plotting).
+
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+/// One figure series: y (± ci) per x per policy.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub x_label: String,
+    pub y_label: String,
+    pub xs: Vec<f64>,
+    /// `(policy name, ys, ci95s)` — ys.len() == xs.len().
+    pub policies: Vec<(String, Vec<f64>, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(x_label: &str, y_label: &str, xs: Vec<f64>) -> Series {
+        Series {
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            xs,
+            policies: Vec::new(),
+        }
+    }
+
+    pub fn push_policy(&mut self, name: &str, ys: Vec<f64>, cis: Vec<f64>) {
+        assert_eq!(ys.len(), self.xs.len());
+        assert_eq!(cis.len(), self.xs.len());
+        self.policies.push((name.to_string(), ys, cis));
+    }
+
+    /// Render a terminal-friendly markdown table (rows = x, cols = policy).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |", self.x_label));
+        for (name, _, _) in &self.policies {
+            out.push_str(&format!(" {name} |"));
+        }
+        out.push('\n');
+        out.push_str("|---|");
+        for _ in &self.policies {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for (i, x) in self.xs.iter().enumerate() {
+            out.push_str(&format!("| {x:.0} |"));
+            for (_, ys, cis) in &self.policies {
+                if cis[i].is_nan() {
+                    out.push_str(&format!(" {:.2} |", ys[i]));
+                } else {
+                    out.push_str(&format!(" {:.2} ±{:.2} |", ys[i], cis[i]));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render CSV (`x,policy1,policy1_ci,...`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.x_label.replace(',', ";"));
+        for (name, _, _) in &self.policies {
+            out.push_str(&format!(",{name},{name}_ci95"));
+        }
+        out.push('\n');
+        for (i, x) in self.xs.iter().enumerate() {
+            out.push_str(&format!("{x}"));
+            for (_, ys, cis) in &self.policies {
+                out.push_str(&format!(",{},{}", ys[i], cis[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("x_label", Json::str(&self.x_label)),
+            ("y_label", Json::str(&self.y_label)),
+            ("xs", Json::arr(self.xs.iter().map(|x| Json::num(*x)))),
+            (
+                "policies",
+                Json::arr(self.policies.iter().map(|(name, ys, cis)| {
+                    Json::obj(vec![
+                        ("name", Json::str(name)),
+                        ("ys", Json::arr(ys.iter().map(|y| Json::num(*y)))),
+                        ("ci95", Json::arr(cis.iter().map(|c| Json::num(*c)))),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// End-to-end serving metrics for one testbed run.
+#[derive(Clone, Debug)]
+pub struct ServingMetrics {
+    pub total_requests: u64,
+    pub served: u64,
+    pub satisfied: u64,
+    pub dropped: u64,
+    pub local: u64,
+    pub offload_cloud: u64,
+    pub offload_peer: u64,
+    /// End-to-end completion latency (ms).
+    pub latency: Histogram,
+    /// Model-inference latency alone (ms).
+    pub inference: Histogram,
+    pub wall_ms: f64,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        ServingMetrics {
+            total_requests: 0,
+            served: 0,
+            satisfied: 0,
+            dropped: 0,
+            local: 0,
+            offload_cloud: 0,
+            offload_peer: 0,
+            latency: Histogram::exponential(1.0, 2.0, 16),
+            inference: Histogram::exponential(0.125, 2.0, 16),
+            wall_ms: 0.0,
+        }
+    }
+}
+
+impl ServingMetrics {
+    pub fn satisfied_pct(&self) -> f64 {
+        if self.total_requests == 0 {
+            return 0.0;
+        }
+        100.0 * self.satisfied as f64 / self.total_requests as f64
+    }
+
+    pub fn local_pct(&self) -> f64 {
+        self.pct(self.local)
+    }
+
+    pub fn cloud_pct(&self) -> f64 {
+        self.pct(self.offload_cloud)
+    }
+
+    pub fn peer_pct(&self) -> f64 {
+        self.pct(self.offload_peer)
+    }
+
+    pub fn dropped_pct(&self) -> f64 {
+        self.pct(self.dropped)
+    }
+
+    fn pct(&self, v: u64) -> f64 {
+        if self.total_requests == 0 {
+            0.0
+        } else {
+            100.0 * v as f64 / self.total_requests as f64
+        }
+    }
+
+    /// Requests per second over the run.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            return 0.0;
+        }
+        self.served as f64 / (self.wall_ms / 1000.0)
+    }
+
+    pub fn summary_markdown(&self) -> String {
+        format!(
+            "| metric | value |\n|---|---|\n\
+             | requests | {} |\n| served | {} |\n| satisfied | {} ({:.1}%) |\n\
+             | dropped | {} ({:.1}%) |\n| local | {:.1}% |\n| offload→cloud | {:.1}% |\n\
+             | offload→peer | {:.1}% |\n| p50 latency | {:.0} ms |\n\
+             | p99 latency | {:.0} ms |\n| mean inference | {:.2} ms |\n\
+             | throughput | {:.1} req/s |\n",
+            self.total_requests,
+            self.served,
+            self.satisfied,
+            self.satisfied_pct(),
+            self.dropped,
+            self.dropped_pct(),
+            self.local_pct(),
+            self.cloud_pct(),
+            self.peer_pct(),
+            self.latency.quantile(0.5),
+            self.latency.quantile(0.99),
+            self.inference.mean(),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_markdown_and_csv_shapes() {
+        let mut s = Series::new("N", "satisfied %", vec![10.0, 20.0]);
+        s.push_policy("gus", vec![90.0, 80.0], vec![1.0, 1.5]);
+        s.push_policy("random", vec![50.0, 40.0], vec![2.0, 2.5]);
+        let md = s.to_markdown();
+        assert!(md.contains("| N | gus | random |"));
+        assert!(md.lines().count() == 4);
+        let csv = s.to_csv();
+        assert!(csv.starts_with("N,gus,gus_ci95,random,random_ci95"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn series_rejects_wrong_length() {
+        let mut s = Series::new("N", "y", vec![1.0, 2.0]);
+        s.push_policy("p", vec![1.0], vec![1.0]);
+    }
+
+    #[test]
+    fn series_json_round_trip() {
+        let mut s = Series::new("x", "y", vec![1.0]);
+        s.push_policy("gus", vec![5.0], vec![0.1]);
+        let j = s.to_json();
+        let parsed = crate::util::json::Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("x_label").as_str(), Some("x"));
+        assert_eq!(
+            parsed.get("policies").as_arr().unwrap()[0].get("name").as_str(),
+            Some("gus")
+        );
+    }
+
+    #[test]
+    fn serving_metrics_percentages() {
+        let mut m = ServingMetrics::default();
+        m.total_requests = 10;
+        m.served = 8;
+        m.satisfied = 6;
+        m.dropped = 2;
+        m.local = 4;
+        m.offload_cloud = 3;
+        m.offload_peer = 1;
+        m.wall_ms = 2000.0;
+        assert!((m.satisfied_pct() - 60.0).abs() < 1e-12);
+        assert!((m.local_pct() - 40.0).abs() < 1e-12);
+        assert!((m.throughput_rps() - 4.0).abs() < 1e-12);
+        assert!(m.summary_markdown().contains("60.0%"));
+    }
+
+    #[test]
+    fn empty_metrics_no_nan_percent() {
+        let m = ServingMetrics::default();
+        assert_eq!(m.satisfied_pct(), 0.0);
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+}

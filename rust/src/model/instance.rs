@@ -1,0 +1,281 @@
+//! A complete MUS problem instance: topology + catalog + placement +
+//! requests + the normalization constants (Max_as, Max_cs) of Def. II.1.
+//!
+//! `candidates(i)` enumerates every feasible-by-placement (server, tier)
+//! option for request i with its completion time
+//! `c_ijkl = T^comm (if offloaded) + T^q + T^proc` — Eq. (II) of the
+//! paper — leaving QoS/capacity filtering to the schedulers (the Happy-*
+//! baselines relax different constraints).
+
+use crate::model::request::Request;
+use crate::model::server::ServerId;
+use crate::model::service::{Placement, ServiceCatalog, TierId};
+use crate::model::topology::Topology;
+
+/// One scheduling option for a request: serve on `server` with model tier
+/// `tier` of the requested service.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    pub server: ServerId,
+    pub tier: TierId,
+    /// Provided accuracy a_ijkl (percent).
+    pub accuracy_pct: f64,
+    /// Completion time c_ijkl (ms), including T^q and T^comm if offloaded.
+    pub completion_ms: f64,
+    /// Computation cost v_ijkl (γ units at `server`).
+    pub comp_cost: f64,
+    /// Communication cost u_ijkl (η units at the covering server; only
+    /// charged when `offloaded`).
+    pub comm_cost: f64,
+    /// True iff `server != s_i`.
+    pub offloaded: bool,
+}
+
+/// The full instance handed to schedulers.
+#[derive(Clone, Debug)]
+pub struct ProblemInstance {
+    pub topology: Topology,
+    pub catalog: ServiceCatalog,
+    pub placement: Placement,
+    pub requests: Vec<Request>,
+    /// Max possible accuracy in the system (Def. II.1 `Max_as`, percent).
+    pub max_accuracy_pct: f64,
+    /// Worst-case completion time (Def. II.1 `Max_cs`, ms).
+    pub max_completion_ms: f64,
+}
+
+impl ProblemInstance {
+    pub fn new(
+        topology: Topology,
+        catalog: ServiceCatalog,
+        placement: Placement,
+        requests: Vec<Request>,
+    ) -> ProblemInstance {
+        assert_eq!(
+            placement.num_servers(),
+            topology.len(),
+            "placement must cover every server"
+        );
+        let max_accuracy_pct = catalog.max_accuracy_pct();
+        // Paper §IV fixes Max_cs = 12000 ms; keep that as the default and
+        // let callers override via `with_normalization`.
+        let max_completion_ms = 12_000.0;
+        ProblemInstance {
+            topology,
+            catalog,
+            placement,
+            requests,
+            max_accuracy_pct,
+            max_completion_ms,
+        }
+    }
+
+    pub fn with_normalization(mut self, max_accuracy_pct: f64, max_completion_ms: f64) -> Self {
+        assert!(max_accuracy_pct > 0.0 && max_completion_ms > 0.0);
+        self.max_accuracy_pct = max_accuracy_pct;
+        self.max_completion_ms = max_completion_ms;
+        self
+    }
+
+    pub fn num_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.topology.len()
+    }
+
+    /// The completion time of serving request `i` at server `j` with tier
+    /// `l`: offloaded requests pay the covering-edge→j forwarding delay.
+    pub fn completion_ms(&self, req: &Request, server: ServerId, tier: TierId) -> f64 {
+        let profile = self.catalog.profile(req.service, tier);
+        let proc = profile.proc_ms[self.topology.server(server).class.index()];
+        let comm = if server == req.covering {
+            0.0
+        } else {
+            self.topology.comm_ms(req.covering, server)
+        };
+        req.queue_delay_ms + comm + proc
+    }
+
+    /// Enumerate all placement-feasible candidates for request `i`.
+    /// No QoS or capacity filtering here (schedulers differ on that).
+    pub fn candidates(&self, i: usize) -> Vec<Candidate> {
+        let req = &self.requests[i];
+        let mut out = Vec::new();
+        for j in 0..self.topology.len() {
+            let server = ServerId(j);
+            for tier in self
+                .placement
+                .tiers_of(j, req.service, self.catalog.num_tiers)
+            {
+                let profile = self.catalog.profile(req.service, tier);
+                out.push(Candidate {
+                    server,
+                    tier,
+                    accuracy_pct: profile.accuracy_pct,
+                    completion_ms: self.completion_ms(req, server, tier),
+                    comp_cost: profile.comp_cost,
+                    comm_cost: profile.comm_cost,
+                    offloaded: server != req.covering,
+                });
+            }
+        }
+        out
+    }
+
+    /// Sanity-check internal consistency; used by config loading and
+    /// property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        for req in &self.requests {
+            if req.covering.0 >= self.topology.len() {
+                return Err(format!("request {:?} covered by unknown server", req.id));
+            }
+            if self.topology.server(req.covering).is_cloud() {
+                return Err(format!(
+                    "request {:?} covered by the cloud — users cannot reach the cloud directly",
+                    req.id
+                ));
+            }
+            if req.service.0 >= self.catalog.num_services {
+                return Err(format!("request {:?} asks for unknown service", req.id));
+            }
+            if !(0.0..=100.0).contains(&req.min_accuracy_pct) {
+                return Err(format!("request {:?} has invalid A_i", req.id));
+            }
+            if req.max_completion_ms < 0.0 {
+                return Err(format!("request {:?} has negative C_i", req.id));
+            }
+        }
+        if self.max_accuracy_pct <= 0.0 || self.max_completion_ms <= 0.0 {
+            return Err("non-positive normalization constants".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::{Server, ServerClass};
+    use crate::model::service::{CatalogParams, ServiceId};
+    use crate::model::topology::TopologyParams;
+    use crate::util::rng::Rng;
+
+    pub fn tiny_instance() -> ProblemInstance {
+        let mut rng = Rng::new(42);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 3).into_with_cloud();
+        let requests = vec![
+            Request::new(0, 0, 0).with_queue_delay(10.0),
+            Request::new(1, 1, 1),
+            Request::new(2, 2, 2).with_qos(80.0, 900.0),
+        ];
+        ProblemInstance::new(topology, catalog, placement, requests)
+    }
+
+    // Helper: extend a 3-edge `full` placement with a cloud row.
+    trait WithCloud {
+        fn into_with_cloud(self) -> Placement;
+    }
+    impl WithCloud for Placement {
+        fn into_with_cloud(self) -> Placement {
+            // Rebuild: 3 edges full + cloud-has-all.
+            let mut on = Vec::new();
+            let mut cloud = Vec::new();
+            for s in 0..3 {
+                let mut pairs = Vec::new();
+                for k in 0..4 {
+                    for l in 0..3 {
+                        if self.has(s, ServiceId(k), TierId(l)) {
+                            pairs.push((ServiceId(k), TierId(l)));
+                        }
+                    }
+                }
+                on.push(pairs);
+                cloud.push(false);
+            }
+            on.push(Vec::new());
+            cloud.push(true);
+            Placement::explicit(on, cloud)
+        }
+    }
+
+    #[test]
+    fn candidates_cover_all_servers_with_full_placement() {
+        let inst = tiny_instance();
+        let cands = inst.candidates(0);
+        // 4 servers × 3 tiers.
+        assert_eq!(cands.len(), 12);
+        assert!(cands.iter().any(|c| c.server == ServerId(3)), "cloud candidate present");
+    }
+
+    #[test]
+    fn local_candidate_has_no_comm_delay() {
+        let inst = tiny_instance();
+        let req = &inst.requests[0];
+        for c in inst.candidates(0) {
+            let profile = inst.catalog.profile(req.service, c.tier);
+            let proc = profile.proc_ms[inst.topology.server(c.server).class.index()];
+            if !c.offloaded {
+                assert!((c.completion_ms - (req.queue_delay_ms + proc)).abs() < 1e-9);
+            } else {
+                assert!(c.completion_ms > req.queue_delay_ms + proc);
+            }
+        }
+    }
+
+    #[test]
+    fn queue_delay_included() {
+        let inst = tiny_instance();
+        let base = inst.completion_ms(&inst.requests[0], ServerId(0), TierId(0));
+        let mut req2 = inst.requests[0].clone();
+        req2.queue_delay_ms += 100.0;
+        let with_queue = inst.completion_ms(&req2, ServerId(0), TierId(0));
+        assert!((with_queue - base - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_accepts_good_instance() {
+        assert!(tiny_instance().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_cloud_covering() {
+        let mut inst = tiny_instance();
+        inst.requests[0].covering = ServerId(3); // the cloud
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_service() {
+        let mut inst = tiny_instance();
+        inst.requests[0].service = ServiceId(99);
+        assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn cloud_candidates_offloaded_and_fast() {
+        let inst = tiny_instance();
+        let cands = inst.candidates(1);
+        let cloud: Vec<_> = cands.iter().filter(|c| c.server == ServerId(3)).collect();
+        assert!(!cloud.is_empty());
+        for c in cloud {
+            assert!(c.offloaded);
+            // Cloud proc ≈ 300·slowdown, edge ≥ 950: cloud candidates beat
+            // local ones on processing even after the comm delay.
+            let local_same_tier = cands
+                .iter()
+                .find(|o| !o.offloaded && o.tier == c.tier)
+                .unwrap();
+            assert!(c.completion_ms < local_same_tier.completion_ms);
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Problem domain: the three-tier user–edge–cloud system of the MUS paper.
+//!
+//! * [`server`] — heterogeneous edge/cloud servers with computation (γ) and
+//!   communication (η) capacities;
+//! * [`service`] — the service catalog: |K| services × |L| DL-model tiers
+//!   with (accuracy, processing-delay, cost) profiles, plus the placement
+//!   of model replicas on servers;
+//! * [`request`] — user requests with QoS thresholds (A_i, C_i) and
+//!   satisfaction weights (w_a, w_c);
+//! * [`topology`] — the server graph and per-hop communication delays;
+//! * [`instance`] — a complete [`instance::ProblemInstance`] handed to the
+//!   schedulers, with candidate enumeration.
+
+pub mod instance;
+pub mod request;
+pub mod server;
+pub mod service;
+pub mod topology;
+
+pub use instance::{Candidate, ProblemInstance};
+pub use request::Request;
+pub use server::{Server, ServerClass, ServerId};
+pub use service::{Placement, ServiceCatalog, ServiceId, TierId};
+pub use topology::Topology;

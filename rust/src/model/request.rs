@@ -1,0 +1,114 @@
+//! User requests: the N set. Each request arrives at its covering edge
+//! server `s_i` carrying QoS thresholds (minimum accuracy `A_i`, deadline
+//! `C_i`) and trade-off weights (w_a, w_c) — Definition II.1 of the paper.
+
+use crate::model::server::ServerId;
+use crate::model::service::ServiceId;
+
+/// Index into `ProblemInstance::requests`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub usize);
+
+/// One user request (users and requests are interchangeable in the paper:
+/// a user with several requests is modelled as several users).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// Requested service type k.
+    pub service: ServiceId,
+    /// Minimum required accuracy A_i (percent).
+    pub min_accuracy_pct: f64,
+    /// Maximum tolerable completion time C_i (ms).
+    pub max_completion_ms: f64,
+    /// Accuracy weight w_ai ∈ [0,1].
+    pub w_accuracy: f64,
+    /// Delay weight w_ci ∈ [0,1].
+    pub w_completion: f64,
+    /// Covering edge server s_i (where the request was submitted).
+    pub covering: ServerId,
+    /// Admission-control queuing delay T^q_{i s_i} already accrued (ms).
+    pub queue_delay_ms: f64,
+    /// Payload size (bytes) — drives communication delay on the serving
+    /// path (one image per request, as in the paper's testbed).
+    pub payload_bytes: u64,
+    /// Scheduling priority (higher first) — the paper's future-work
+    /// extension ("considering different priorities for the requests");
+    /// 0 = best-effort default.
+    pub priority: u8,
+}
+
+impl Request {
+    /// Minimal constructor used by tests; production paths go through
+    /// `workload::RequestGenerator`.
+    pub fn new(id: usize, service: usize, covering: usize) -> Request {
+        Request {
+            id: RequestId(id),
+            service: ServiceId(service),
+            min_accuracy_pct: 45.0,
+            max_completion_ms: 4000.0,
+            w_accuracy: 1.0,
+            w_completion: 1.0,
+            covering: ServerId(covering),
+            queue_delay_ms: 0.0,
+            payload_bytes: 14_000, // ≈ a small JPEG, matches testbed images
+            priority: 0,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: u8) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_qos(mut self, min_accuracy_pct: f64, max_completion_ms: f64) -> Request {
+        self.min_accuracy_pct = min_accuracy_pct;
+        self.max_completion_ms = max_completion_ms;
+        self
+    }
+
+    pub fn with_weights(mut self, w_accuracy: f64, w_completion: f64) -> Request {
+        assert!((0.0..=1.0).contains(&w_accuracy) && (0.0..=1.0).contains(&w_completion));
+        self.w_accuracy = w_accuracy;
+        self.w_completion = w_completion;
+        self
+    }
+
+    pub fn with_queue_delay(mut self, ms: f64) -> Request {
+        self.queue_delay_ms = ms;
+        self
+    }
+
+    pub fn with_payload(mut self, bytes: u64) -> Request {
+        self.payload_bytes = bytes;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_fields() {
+        let r = Request::new(7, 3, 1)
+            .with_qos(60.0, 2500.0)
+            .with_weights(0.3, 0.9)
+            .with_queue_delay(12.0)
+            .with_payload(9000);
+        assert_eq!(r.id, RequestId(7));
+        assert_eq!(r.service, ServiceId(3));
+        assert_eq!(r.covering, ServerId(1));
+        assert_eq!(r.min_accuracy_pct, 60.0);
+        assert_eq!(r.max_completion_ms, 2500.0);
+        assert_eq!(r.w_accuracy, 0.3);
+        assert_eq!(r.w_completion, 0.9);
+        assert_eq!(r.queue_delay_ms, 12.0);
+        assert_eq!(r.payload_bytes, 9000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weights_out_of_range_rejected() {
+        let _ = Request::new(0, 0, 0).with_weights(1.5, 0.5);
+    }
+}

@@ -1,0 +1,155 @@
+//! Servers: the M set. Edge servers come in three heterogeneity classes
+//! (paper §IV: "three types of edge servers ... differ based on their
+//! storage, communication, and computation capacities"); the cloud is
+//! modelled identically but with larger capacities and no coverage.
+
+/// Index into `Topology::servers`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServerId(pub usize);
+
+impl std::fmt::Display for ServerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Heterogeneity class of a server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ServerClass {
+    /// Raspberry-Pi-class small edge node.
+    EdgeSmall,
+    /// Mid-range edge node.
+    EdgeMedium,
+    /// Well-provisioned edge node.
+    EdgeLarge,
+    /// The (resource-constrained) cloud tier.
+    Cloud,
+}
+
+impl ServerClass {
+    pub fn is_cloud(self) -> bool {
+        matches!(self, ServerClass::Cloud)
+    }
+
+    /// All edge classes in ascending capability order.
+    pub const EDGE_CLASSES: [ServerClass; 3] =
+        [ServerClass::EdgeSmall, ServerClass::EdgeMedium, ServerClass::EdgeLarge];
+
+    /// Index used by the catalog's per-class processing-delay tables.
+    pub fn index(self) -> usize {
+        match self {
+            ServerClass::EdgeSmall => 0,
+            ServerClass::EdgeMedium => 1,
+            ServerClass::EdgeLarge => 2,
+            ServerClass::Cloud => 3,
+        }
+    }
+
+    pub const COUNT: usize = 4;
+
+    /// Default computation capacity γ (abstract units ≈ concurrent
+    /// inference slots per decision frame; paper testbed: 3 threads).
+    pub fn default_gamma(self) -> f64 {
+        match self {
+            ServerClass::EdgeSmall => 2.0,
+            ServerClass::EdgeMedium => 3.0,
+            ServerClass::EdgeLarge => 4.0,
+            ServerClass::Cloud => 24.0,
+        }
+    }
+
+    /// Default communication capacity η (images forwardable per frame;
+    /// paper testbed: 10).
+    pub fn default_eta(self) -> f64 {
+        match self {
+            ServerClass::EdgeSmall => 6.0,
+            ServerClass::EdgeMedium => 10.0,
+            ServerClass::EdgeLarge => 14.0,
+            ServerClass::Cloud => 48.0,
+        }
+    }
+
+    /// Default storage capacity: how many (service, tier) replicas fit.
+    pub fn default_storage_slots(self) -> usize {
+        match self {
+            ServerClass::EdgeSmall => 40,
+            ServerClass::EdgeMedium => 80,
+            ServerClass::EdgeLarge => 140,
+            ServerClass::Cloud => usize::MAX,
+        }
+    }
+}
+
+/// One server in the M set.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub id: ServerId,
+    pub class: ServerClass,
+    /// Computation capacity γ_j (constraint 2d).
+    pub gamma: f64,
+    /// Communication capacity η_j (constraint 2e).
+    pub eta: f64,
+}
+
+impl Server {
+    pub fn new(id: usize, class: ServerClass) -> Server {
+        Server {
+            id: ServerId(id),
+            class,
+            gamma: class.default_gamma(),
+            eta: class.default_eta(),
+        }
+    }
+
+    pub fn with_capacities(mut self, gamma: f64, eta: f64) -> Server {
+        self.gamma = gamma;
+        self.eta = eta;
+        self
+    }
+
+    pub fn is_cloud(&self) -> bool {
+        self.class.is_cloud()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_indices_are_dense() {
+        let mut seen = [false; ServerClass::COUNT];
+        for c in [
+            ServerClass::EdgeSmall,
+            ServerClass::EdgeMedium,
+            ServerClass::EdgeLarge,
+            ServerClass::Cloud,
+        ] {
+            seen[c.index()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn cloud_dominates_edges_in_capacity() {
+        for c in ServerClass::EDGE_CLASSES {
+            assert!(ServerClass::Cloud.default_gamma() > c.default_gamma());
+            assert!(ServerClass::Cloud.default_eta() > c.default_eta());
+        }
+    }
+
+    #[test]
+    fn edge_classes_strictly_ordered() {
+        let g: Vec<f64> = ServerClass::EDGE_CLASSES.iter().map(|c| c.default_gamma()).collect();
+        assert!(g[0] < g[1] && g[1] < g[2]);
+    }
+
+    #[test]
+    fn builder_overrides() {
+        let s = Server::new(3, ServerClass::EdgeSmall).with_capacities(7.0, 9.0);
+        assert_eq!(s.gamma, 7.0);
+        assert_eq!(s.eta, 9.0);
+        assert_eq!(s.id, ServerId(3));
+        assert!(!s.is_cloud());
+    }
+}

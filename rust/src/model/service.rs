@@ -1,0 +1,376 @@
+//! Service catalog: the K services, each with |L| DL-model tiers, and the
+//! placement of model replicas on servers.
+//!
+//! A tier's profile is everything the scheduler consumes about a model:
+//! provided accuracy `a_kl`, per-server-class processing delay
+//! `T^proc_{jkl}`, computation cost `v_kl` and communication cost `u_kl`.
+//! On the serving path each (service, tier) additionally maps to a real
+//! compiled EdgeNet artifact (see `runtime::manifest`).
+
+use crate::model::server::ServerClass;
+use crate::util::rng::Rng;
+
+/// Index of a service k ∈ K.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ServiceId(pub usize);
+
+/// Index of a DL-model tier l ∈ L (ascending accuracy).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TierId(pub usize);
+
+/// Scheduler-visible profile of one (service, tier) model.
+#[derive(Clone, Debug)]
+pub struct TierProfile {
+    /// Provided top-1 accuracy a_kl in percent.
+    pub accuracy_pct: f64,
+    /// Processing delay per server class (ms), indexed by
+    /// `ServerClass::index()`.
+    pub proc_ms: [f64; ServerClass::COUNT],
+    /// Computation cost v_kl (γ units consumed while serving).
+    pub comp_cost: f64,
+    /// Communication cost u_kl (η units consumed at the covering server
+    /// when the request is offloaded).
+    pub comm_cost: f64,
+    /// Model artifact size (bytes) — drives storage placement.
+    pub model_bytes: u64,
+}
+
+/// Parameters for synthesizing a catalog that matches the paper's §IV
+/// testbed measurements.
+#[derive(Clone, Debug)]
+pub struct CatalogParams {
+    pub num_services: usize,
+    pub num_tiers: usize,
+    /// Edge processing-delay band for the *fastest* tier (ms); paper:
+    /// 950–1300 measured for SqueezeNet on an RP4.
+    pub edge_proc_lo_ms: f64,
+    pub edge_proc_hi_ms: f64,
+    /// Cloud processing delay for the *fastest* tier (ms); paper: 300
+    /// measured for GoogleNet on the desktop "cloud".
+    pub cloud_proc_ms: f64,
+    /// Accuracy band covered by the tier ladder (percent).
+    pub accuracy_lo_pct: f64,
+    pub accuracy_hi_pct: f64,
+    /// Multiplier applied per tier step to processing delay (costlier
+    /// models run longer — the accuracy-time trade-off).
+    pub tier_slowdown: f64,
+    /// Extra γ units the top tier costs relative to the bottom tier
+    /// (comp_cost = 1 + growth·frac). The paper's testbed charges one
+    /// thread per request regardless of model, so the default is 0;
+    /// the ablation bench sweeps it.
+    pub tier_cost_growth: f64,
+}
+
+impl Default for CatalogParams {
+    fn default() -> Self {
+        CatalogParams {
+            num_services: 100,
+            num_tiers: 10,
+            edge_proc_lo_ms: 950.0,
+            edge_proc_hi_ms: 1300.0,
+            cloud_proc_ms: 300.0,
+            accuracy_lo_pct: 30.0,
+            accuracy_hi_pct: 95.0,
+            tier_slowdown: 1.08,
+            tier_cost_growth: 0.0,
+        }
+    }
+}
+
+/// The catalog for all services.
+#[derive(Clone, Debug)]
+pub struct ServiceCatalog {
+    pub num_services: usize,
+    pub num_tiers: usize,
+    /// `profiles[k][l]`.
+    profiles: Vec<Vec<TierProfile>>,
+}
+
+impl ServiceCatalog {
+    /// Synthesize a catalog per the paper's measured bands. Deterministic
+    /// in `rng`.
+    pub fn synthetic(params: &CatalogParams, rng: &mut Rng) -> ServiceCatalog {
+        assert!(params.num_services > 0 && params.num_tiers > 0);
+        let mut profiles = Vec::with_capacity(params.num_services);
+        for _ in 0..params.num_services {
+            let mut tiers = Vec::with_capacity(params.num_tiers);
+            // Per-service base edge delay within the measured band.
+            let base_edge = rng.uniform(params.edge_proc_lo_ms, params.edge_proc_hi_ms);
+            let base_cloud = params.cloud_proc_ms * rng.uniform(0.9, 1.1);
+            for l in 0..params.num_tiers {
+                let frac = if params.num_tiers == 1 {
+                    0.0
+                } else {
+                    l as f64 / (params.num_tiers - 1) as f64
+                };
+                // Accuracy rises with tier; add small per-service jitter.
+                let acc = params.accuracy_lo_pct
+                    + frac * (params.accuracy_hi_pct - params.accuracy_lo_pct)
+                    + rng.uniform(-2.0, 2.0);
+                let slow = params.tier_slowdown.powi(l as i32);
+                // Edge classes: small slower than large (speed 1.15/1.0/0.85).
+                let class_speed = [1.15, 1.0, 0.85];
+                let mut proc = [0.0; ServerClass::COUNT];
+                for (ci, speed) in class_speed.iter().enumerate() {
+                    proc[ci] = base_edge * slow * speed;
+                }
+                proc[ServerClass::Cloud.index()] = base_cloud * slow;
+                tiers.push(TierProfile {
+                    accuracy_pct: acc.clamp(0.0, 100.0),
+                    proc_ms: proc,
+                    comp_cost: 1.0 + params.tier_cost_growth * frac,
+                    comm_cost: 1.0, // one image forwarded per offload
+                    model_bytes: (2_000_000.0 * (1.0 + 4.0 * frac)) as u64,
+                });
+            }
+            profiles.push(tiers);
+        }
+        ServiceCatalog {
+            num_services: params.num_services,
+            num_tiers: params.num_tiers,
+            profiles,
+        }
+    }
+
+    /// Build from explicit profiles (used by the serving path where the
+    /// tiers are the real compiled EdgeNet artifacts).
+    pub fn from_profiles(profiles: Vec<Vec<TierProfile>>) -> ServiceCatalog {
+        assert!(!profiles.is_empty());
+        let num_tiers = profiles[0].len();
+        assert!(num_tiers > 0);
+        assert!(profiles.iter().all(|p| p.len() == num_tiers));
+        ServiceCatalog { num_services: profiles.len(), num_tiers, profiles }
+    }
+
+    pub fn profile(&self, k: ServiceId, l: TierId) -> &TierProfile {
+        &self.profiles[k.0][l.0]
+    }
+
+    pub fn services(&self) -> impl Iterator<Item = ServiceId> {
+        (0..self.num_services).map(ServiceId)
+    }
+
+    pub fn tiers(&self) -> impl Iterator<Item = TierId> {
+        (0..self.num_tiers).map(TierId)
+    }
+
+    /// Highest accuracy available anywhere in the catalog (`Max_as`).
+    pub fn max_accuracy_pct(&self) -> f64 {
+        self.profiles
+            .iter()
+            .flatten()
+            .map(|p| p.accuracy_pct)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Which (service, tier) replicas each server holds.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    /// `on[j]` = sorted (k, l) pairs available on server j; the cloud
+    /// entry holds everything (represented implicitly).
+    on: Vec<Vec<(ServiceId, TierId)>>,
+    cloud_has_all: Vec<bool>,
+}
+
+impl Placement {
+    /// Random storage-constrained placement (paper §IV: "services are
+    /// randomly placed on the edge servers based on their associated
+    /// storage capacity"); the cloud holds every model.
+    pub fn random(
+        catalog: &ServiceCatalog,
+        classes: &[ServerClass],
+        rng: &mut Rng,
+    ) -> Placement {
+        let mut on = Vec::with_capacity(classes.len());
+        let mut cloud_has_all = Vec::with_capacity(classes.len());
+        // All (k,l) pairs, shuffled per server.
+        let all: Vec<(ServiceId, TierId)> = (0..catalog.num_services)
+            .flat_map(|k| (0..catalog.num_tiers).map(move |l| (ServiceId(k), TierId(l))))
+            .collect();
+        for &class in classes {
+            if class.is_cloud() {
+                on.push(Vec::new());
+                cloud_has_all.push(true);
+                continue;
+            }
+            let slots = class.default_storage_slots();
+            let mut mine = all.clone();
+            rng.shuffle(&mut mine);
+            mine.truncate(slots.min(mine.len()));
+            mine.sort();
+            on.push(mine);
+            cloud_has_all.push(false);
+        }
+        Placement { on, cloud_has_all }
+    }
+
+    /// Place everything everywhere (used by unit tests / Happy scenarios).
+    pub fn full(catalog: &ServiceCatalog, num_servers: usize) -> Placement {
+        let all: Vec<(ServiceId, TierId)> = (0..catalog.num_services)
+            .flat_map(|k| (0..catalog.num_tiers).map(move |l| (ServiceId(k), TierId(l))))
+            .collect();
+        Placement {
+            on: vec![all; num_servers],
+            cloud_has_all: vec![false; num_servers],
+        }
+    }
+
+    /// Explicit placement (serving path: the artifacts actually loaded).
+    pub fn explicit(on: Vec<Vec<(ServiceId, TierId)>>, cloud_has_all: Vec<bool>) -> Placement {
+        Placement { on, cloud_has_all }
+    }
+
+    pub fn has(&self, server: usize, k: ServiceId, l: TierId) -> bool {
+        if self.cloud_has_all[server] {
+            return true;
+        }
+        self.on[server].binary_search(&(k, l)).is_ok()
+    }
+
+    /// Tiers of service k available on `server`, ascending.
+    pub fn tiers_of(&self, server: usize, k: ServiceId, num_tiers: usize) -> Vec<TierId> {
+        if self.cloud_has_all[server] {
+            return (0..num_tiers).map(TierId).collect();
+        }
+        self.on[server]
+            .iter()
+            .filter(|(kk, _)| *kk == k)
+            .map(|(_, l)| *l)
+            .collect()
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.on.len()
+    }
+
+    /// Total replicas placed on a given edge server.
+    pub fn replica_count(&self, server: usize) -> usize {
+        if self.cloud_has_all[server] {
+            usize::MAX
+        } else {
+            self.on[server].len()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog() -> ServiceCatalog {
+        let mut rng = Rng::new(1);
+        ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 5, num_tiers: 4, ..Default::default() },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn accuracy_monotone_in_tier_on_average() {
+        let c = catalog();
+        for k in c.services() {
+            let first = c.profile(k, TierId(0)).accuracy_pct;
+            let last = c.profile(k, TierId(3)).accuracy_pct;
+            assert!(last > first + 20.0, "tier ladder must span accuracy band");
+        }
+    }
+
+    #[test]
+    fn proc_delay_monotone_in_tier() {
+        let c = catalog();
+        for k in c.services() {
+            for ci in 0..ServerClass::COUNT {
+                let p0 = c.profile(k, TierId(0)).proc_ms[ci];
+                let p3 = c.profile(k, TierId(3)).proc_ms[ci];
+                assert!(p3 > p0, "higher tier must be slower");
+            }
+        }
+    }
+
+    #[test]
+    fn cloud_faster_than_edge() {
+        let c = catalog();
+        for k in c.services() {
+            for l in c.tiers() {
+                let p = c.profile(k, l);
+                let cloud = p.proc_ms[ServerClass::Cloud.index()];
+                for e in 0..3 {
+                    assert!(cloud < p.proc_ms[e]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_band_respected_for_base_tier() {
+        let c = catalog();
+        for k in c.services() {
+            let p = c.profile(k, TierId(0)).proc_ms[ServerClass::EdgeMedium.index()];
+            assert!((950.0..=1300.0).contains(&p), "got {p}");
+        }
+    }
+
+    #[test]
+    fn max_accuracy_is_max() {
+        let c = catalog();
+        let m = c.max_accuracy_pct();
+        for k in c.services() {
+            for l in c.tiers() {
+                assert!(c.profile(k, l).accuracy_pct <= m);
+            }
+        }
+    }
+
+    #[test]
+    fn placement_respects_storage_and_cloud_has_all() {
+        let c = catalog();
+        let classes = [ServerClass::EdgeSmall, ServerClass::EdgeLarge, ServerClass::Cloud];
+        let mut rng = Rng::new(2);
+        let p = Placement::random(&c, &classes, &mut rng);
+        assert!(p.replica_count(0) <= ServerClass::EdgeSmall.default_storage_slots());
+        assert!(p.has(2, ServiceId(4), TierId(3)), "cloud must hold everything");
+        // Edge replicas must be consistent with `has`.
+        for (k, l) in [(ServiceId(0), TierId(0)), (ServiceId(3), TierId(2))] {
+            let has = p.has(0, k, l);
+            let listed = p.tiers_of(0, k, c.num_tiers).contains(&l);
+            assert_eq!(has, listed);
+        }
+    }
+
+    #[test]
+    fn placement_full_has_everything() {
+        let c = catalog();
+        let p = Placement::full(&c, 2);
+        for s in 0..2 {
+            for k in c.services() {
+                for l in c.tiers() {
+                    assert!(p.has(s, k, l));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiers_of_sorted_ascending_for_cloud() {
+        let c = catalog();
+        let p = Placement::random(&c, &[ServerClass::Cloud], &mut Rng::new(3));
+        let ts = p.tiers_of(0, ServiceId(1), c.num_tiers);
+        assert_eq!(ts, (0..c.num_tiers).map(TierId).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_profiles_round_trip() {
+        let c = catalog();
+        let profiles: Vec<Vec<TierProfile>> = (0..c.num_services)
+            .map(|k| (0..c.num_tiers).map(|l| c.profile(ServiceId(k), TierId(l)).clone()).collect())
+            .collect();
+        let c2 = ServiceCatalog::from_profiles(profiles);
+        assert_eq!(c2.num_services, c.num_services);
+        assert_eq!(c2.num_tiers, c.num_tiers);
+        assert_eq!(
+            c2.profile(ServiceId(2), TierId(1)).accuracy_pct,
+            c.profile(ServiceId(2), TierId(1)).accuracy_pct
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! The three-tier topology: users → covering edge servers → peer edges and
+//! the cloud. Users never talk to the cloud directly (paper §II); all
+//! offloads originate at the covering edge server.
+//!
+//! Communication delays are held as a per-pair matrix (ms per request
+//! payload), calibrated from the paper's testbed numbers by default and
+//! recomputable from a `net::LinkModel` on the serving path.
+
+use crate::model::server::{Server, ServerClass, ServerId};
+use crate::util::rng::Rng;
+
+/// The server graph.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub servers: Vec<Server>,
+    /// `comm_ms[a][b]`: delay to forward one request payload a→b.
+    comm_ms: Vec<Vec<f64>>,
+}
+
+/// Parameters for the default paper-style topology.
+#[derive(Clone, Debug)]
+pub struct TopologyParams {
+    pub num_edge: usize,
+    pub num_cloud: usize,
+    /// Mean edge↔edge forwarding delay (ms per payload); testbed-derived.
+    pub edge_edge_ms: f64,
+    /// Mean edge↔cloud forwarding delay (ms per payload); the testbed path
+    /// traverses the RP3 forwarder, so this is larger.
+    pub edge_cloud_ms: f64,
+    /// Multiplicative jitter half-range applied per pair (0.0 = none).
+    pub jitter: f64,
+}
+
+impl Default for TopologyParams {
+    fn default() -> Self {
+        // Paper §IV numerics: 9 edge + 1 cloud; B ≈ 600 bytes/ms and
+        // ~14 kB images give ~23 ms per image edge↔edge; the edge↔cloud
+        // path adds the forwarder hop.
+        TopologyParams {
+            num_edge: 9,
+            num_cloud: 1,
+            edge_edge_ms: 25.0,
+            edge_cloud_ms: 60.0,
+            jitter: 0.2,
+        }
+    }
+}
+
+impl Topology {
+    /// Build the paper's topology: `num_edge` edge servers cycling through
+    /// the three heterogeneity classes, plus `num_cloud` cloud servers.
+    pub fn paper_default(params: &TopologyParams, rng: &mut Rng) -> Topology {
+        assert!(params.num_edge > 0);
+        let mut servers = Vec::with_capacity(params.num_edge + params.num_cloud);
+        for i in 0..params.num_edge {
+            let class = ServerClass::EDGE_CLASSES[i % 3];
+            servers.push(Server::new(i, class));
+        }
+        for i in 0..params.num_cloud {
+            servers.push(Server::new(params.num_edge + i, ServerClass::Cloud));
+        }
+        let n = servers.len();
+        let mut comm_ms = vec![vec![0.0; n]; n];
+        for a in 0..n {
+            for b in 0..n {
+                if a == b {
+                    continue;
+                }
+                let base = if servers[a].is_cloud() || servers[b].is_cloud() {
+                    params.edge_cloud_ms
+                } else {
+                    params.edge_edge_ms
+                };
+                comm_ms[a][b] = base * rng.uniform(1.0 - params.jitter, 1.0 + params.jitter);
+            }
+        }
+        Topology { servers, comm_ms }
+    }
+
+    /// Explicit construction (tests, serving path).
+    pub fn explicit(servers: Vec<Server>, comm_ms: Vec<Vec<f64>>) -> Topology {
+        let n = servers.len();
+        assert_eq!(comm_ms.len(), n);
+        assert!(comm_ms.iter().all(|row| row.len() == n));
+        Topology { servers, comm_ms }
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    pub fn server(&self, id: ServerId) -> &Server {
+        &self.servers[id.0]
+    }
+
+    /// Communication delay T^comm for forwarding one request a→b (ms).
+    pub fn comm_ms(&self, a: ServerId, b: ServerId) -> f64 {
+        self.comm_ms[a.0][b.0]
+    }
+
+    /// Overwrite one directed link delay (used by the serving path when
+    /// the bandwidth estimator updates its expectation).
+    pub fn set_comm_ms(&mut self, a: ServerId, b: ServerId, ms: f64) {
+        self.comm_ms[a.0][b.0] = ms;
+    }
+
+    pub fn edge_ids(&self) -> Vec<ServerId> {
+        self.servers.iter().filter(|s| !s.is_cloud()).map(|s| s.id).collect()
+    }
+
+    pub fn cloud_ids(&self) -> Vec<ServerId> {
+        self.servers.iter().filter(|s| s.is_cloud()).map(|s| s.id).collect()
+    }
+
+    /// Worst-case completion time `Max_cs` ingredient: the largest
+    /// pairwise communication delay in the system.
+    pub fn max_comm_ms(&self) -> f64 {
+        self.comm_ms
+            .iter()
+            .flatten()
+            .copied()
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::paper_default(&TopologyParams::default(), &mut Rng::new(1))
+    }
+
+    #[test]
+    fn paper_default_has_nine_edges_one_cloud() {
+        let t = topo();
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.edge_ids().len(), 9);
+        assert_eq!(t.cloud_ids(), vec![ServerId(9)]);
+    }
+
+    #[test]
+    fn self_delay_zero_others_positive() {
+        let t = topo();
+        for a in 0..t.len() {
+            for b in 0..t.len() {
+                let d = t.comm_ms(ServerId(a), ServerId(b));
+                if a == b {
+                    assert_eq!(d, 0.0);
+                } else {
+                    assert!(d > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cloud_links_slower_than_edge_links_on_average() {
+        let t = topo();
+        let cloud = t.cloud_ids()[0];
+        let edges = t.edge_ids();
+        let avg_cloud: f64 = edges.iter().map(|e| t.comm_ms(*e, cloud)).sum::<f64>()
+            / edges.len() as f64;
+        let mut edge_sum = 0.0;
+        let mut n = 0;
+        for &a in &edges {
+            for &b in &edges {
+                if a != b {
+                    edge_sum += t.comm_ms(a, b);
+                    n += 1;
+                }
+            }
+        }
+        assert!(avg_cloud > edge_sum / n as f64);
+    }
+
+    #[test]
+    fn heterogeneity_classes_cycle() {
+        let t = topo();
+        assert_eq!(t.server(ServerId(0)).class, ServerClass::EdgeSmall);
+        assert_eq!(t.server(ServerId(1)).class, ServerClass::EdgeMedium);
+        assert_eq!(t.server(ServerId(2)).class, ServerClass::EdgeLarge);
+        assert_eq!(t.server(ServerId(3)).class, ServerClass::EdgeSmall);
+    }
+
+    #[test]
+    fn set_comm_ms_updates() {
+        let mut t = topo();
+        t.set_comm_ms(ServerId(0), ServerId(1), 99.0);
+        assert_eq!(t.comm_ms(ServerId(0), ServerId(1)), 99.0);
+    }
+
+    #[test]
+    fn max_comm_is_max() {
+        let t = topo();
+        let m = t.max_comm_ms();
+        for a in 0..t.len() {
+            for b in 0..t.len() {
+                assert!(t.comm_ms(ServerId(a), ServerId(b)) <= m);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = Topology::paper_default(&TopologyParams::default(), &mut Rng::new(5));
+        let b = Topology::paper_default(&TopologyParams::default(), &mut Rng::new(5));
+        assert_eq!(a.comm_ms(ServerId(0), ServerId(3)), b.comm_ms(ServerId(0), ServerId(3)));
+    }
+}

@@ -1,0 +1,158 @@
+//! Network substrate: link models, the paper's adaptive bandwidth
+//! estimator, and a simulated wireless channel for the serving path.
+//!
+//! The paper's testbed measures an average bandwidth of ~600 bytes/ms on
+//! the edge↔cloud path and updates its expectation each round with
+//! `E[B_{t+1}] = (B_t + B_{t-1}) / 2`; the expected per-image
+//! communication delay is then `size / E[B]`.
+
+use crate::util::rng::Rng;
+
+/// The paper's two-sample moving-average bandwidth estimator.
+#[derive(Clone, Debug)]
+pub struct BandwidthEstimator {
+    /// B_t (bytes/ms): most recent observation.
+    b_t: f64,
+    /// B_{t-1} (bytes/ms).
+    b_prev: f64,
+}
+
+impl BandwidthEstimator {
+    /// Start from an initial historical estimate (paper: 600 bytes/ms).
+    pub fn new(initial_bytes_per_ms: f64) -> BandwidthEstimator {
+        assert!(initial_bytes_per_ms > 0.0);
+        BandwidthEstimator { b_t: initial_bytes_per_ms, b_prev: initial_bytes_per_ms }
+    }
+
+    /// `E[B_{t+1}] = (B_t + B_{t-1}) / 2`.
+    pub fn expected_bytes_per_ms(&self) -> f64 {
+        0.5 * (self.b_t + self.b_prev)
+    }
+
+    /// Feed one observed bandwidth sample (bytes/ms).
+    pub fn observe(&mut self, bytes_per_ms: f64) {
+        if bytes_per_ms.is_finite() && bytes_per_ms > 0.0 {
+            self.b_prev = self.b_t;
+            self.b_t = bytes_per_ms;
+        }
+    }
+
+    /// Expected forwarding delay for a payload under the current estimate.
+    pub fn expected_delay_ms(&self, payload_bytes: u64) -> f64 {
+        payload_bytes as f64 / self.expected_bytes_per_ms()
+    }
+}
+
+/// A (directed) link with stochastic bandwidth — the simulated wireless
+/// channel of the testbed analog.
+#[derive(Clone, Debug)]
+pub struct Link {
+    /// Mean bandwidth (bytes/ms).
+    pub mean_bytes_per_ms: f64,
+    /// Relative jitter σ/μ of the per-transfer bandwidth draw.
+    pub jitter: f64,
+    /// Fixed propagation/forwarder latency (ms) added per transfer.
+    pub propagation_ms: f64,
+}
+
+impl Link {
+    pub fn new(mean_bytes_per_ms: f64, jitter: f64, propagation_ms: f64) -> Link {
+        assert!(mean_bytes_per_ms > 0.0 && jitter >= 0.0 && propagation_ms >= 0.0);
+        Link { mean_bytes_per_ms, jitter, propagation_ms }
+    }
+
+    /// Paper-calibrated defaults: B ≈ 600 bytes/ms edge↔cloud through the
+    /// RP3 forwarder; edge↔edge is a single hop and slightly faster.
+    pub fn edge_cloud_default() -> Link {
+        Link::new(600.0, 0.25, 8.0)
+    }
+
+    pub fn edge_edge_default() -> Link {
+        Link::new(900.0, 0.2, 3.0)
+    }
+
+    /// Sample an actual transfer: returns (delay_ms, realized bytes/ms).
+    pub fn transfer(&self, payload_bytes: u64, rng: &mut Rng) -> (f64, f64) {
+        let bw = rng
+            .normal(self.mean_bytes_per_ms, self.jitter * self.mean_bytes_per_ms)
+            .max(self.mean_bytes_per_ms * 0.05);
+        let delay = self.propagation_ms + payload_bytes as f64 / bw;
+        (delay, bw)
+    }
+
+    /// Deterministic expected delay (used to build comm matrices).
+    pub fn expected_delay_ms(&self, payload_bytes: u64) -> f64 {
+        self.propagation_ms + payload_bytes as f64 / self.mean_bytes_per_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_is_two_sample_average() {
+        let mut e = BandwidthEstimator::new(600.0);
+        assert_eq!(e.expected_bytes_per_ms(), 600.0);
+        e.observe(800.0);
+        // B_t=800, B_{t-1}=600 → 700.
+        assert_eq!(e.expected_bytes_per_ms(), 700.0);
+        e.observe(400.0);
+        assert_eq!(e.expected_bytes_per_ms(), 600.0);
+    }
+
+    #[test]
+    fn estimator_converges_on_constant_channel() {
+        let mut e = BandwidthEstimator::new(600.0);
+        for _ in 0..10 {
+            e.observe(1000.0);
+        }
+        assert_eq!(e.expected_bytes_per_ms(), 1000.0);
+    }
+
+    #[test]
+    fn estimator_ignores_bad_samples() {
+        let mut e = BandwidthEstimator::new(600.0);
+        e.observe(f64::NAN);
+        e.observe(-5.0);
+        e.observe(0.0);
+        assert_eq!(e.expected_bytes_per_ms(), 600.0);
+    }
+
+    #[test]
+    fn expected_delay_uses_estimate() {
+        let e = BandwidthEstimator::new(600.0);
+        assert!((e.expected_delay_ms(6000) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transfer_delay_reasonable() {
+        let link = Link::edge_cloud_default();
+        let mut rng = Rng::new(1);
+        let mut acc = 0.0;
+        let n = 5000;
+        for _ in 0..n {
+            let (d, bw) = link.transfer(12_000, &mut rng);
+            assert!(d > link.propagation_ms);
+            assert!(bw > 0.0);
+            acc += d;
+        }
+        let mean = acc / n as f64;
+        let expect = link.expected_delay_ms(12_000);
+        // Jensen: E[1/bw] ≥ 1/E[bw], so the observed mean is a bit above.
+        assert!(mean > expect * 0.95 && mean < expect * 1.35, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn estimator_tracks_drifting_channel() {
+        let mut e = BandwidthEstimator::new(600.0);
+        let link = Link::new(300.0, 0.1, 0.0);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let (_, bw) = link.transfer(10_000, &mut rng);
+            e.observe(bw);
+        }
+        let est = e.expected_bytes_per_ms();
+        assert!((est - 300.0).abs() < 100.0, "est={est}");
+    }
+}

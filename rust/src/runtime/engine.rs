@@ -1,0 +1,180 @@
+//! PJRT inference engine: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the serving hot path.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`), not a
+//! serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids. See
+//! /opt/xla-example/README.md and DESIGN.md.
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One compiled executable plus its metadata.
+struct Loaded {
+    info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A PJRT CPU client with a set of compiled EdgeNet artifacts.
+///
+/// Not `Sync`: each serving thread that needs inference owns its own
+/// engine (or talks to one through a channel). Compilation happens once
+/// in `load`; `infer` is allocation-light.
+pub struct InferenceEngine {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+    pub manifest: Manifest,
+}
+
+/// Result of one inference call.
+#[derive(Clone, Debug)]
+pub struct InferenceResult {
+    /// Logits, row-major `(batch, num_classes)`.
+    pub logits: Vec<f32>,
+    pub batch: usize,
+    pub num_classes: usize,
+    /// Wall time of the PJRT execute call (ms).
+    pub execute_ms: f64,
+}
+
+impl InferenceResult {
+    /// Argmax per image.
+    pub fn predictions(&self) -> Vec<usize> {
+        (0..self.batch)
+            .map(|b| {
+                let row = &self.logits[b * self.num_classes..(b + 1) * self.num_classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+impl InferenceEngine {
+    /// Load and compile every artifact in the manifest.
+    pub fn load(dir: &str) -> Result<InferenceEngine> {
+        Self::load_filtered(dir, |_| true)
+    }
+
+    /// Load only artifacts matching `keep` (e.g. one server's placement).
+    pub fn load_filtered(
+        dir: &str,
+        keep: impl Fn(&ArtifactInfo) -> bool,
+    ) -> Result<InferenceEngine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut loaded = HashMap::new();
+        for info in manifest.artifacts.iter().filter(|a| keep(a)) {
+            let path = manifest.path_of(info);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", info.name))?;
+            loaded.insert(info.name.clone(), Loaded { info: info.clone(), exe });
+        }
+        if loaded.is_empty() {
+            bail!("no artifacts loaded from {dir}");
+        }
+        Ok(InferenceEngine { client, loaded, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.loaded.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.loaded.get(name).map(|l| &l.info)
+    }
+
+    /// Run one batch through artifact `name`.
+    ///
+    /// `images` is row-major `(batch, H, W, C)` f32 and must match the
+    /// artifact's input shape exactly (batching/padding is the caller's
+    /// job — see `serving::batcher`).
+    pub fn infer(&self, name: &str, images: &[f32]) -> Result<InferenceResult> {
+        let entry = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact {name} not loaded"))?;
+        let expect: usize = entry.info.input_shape.iter().product();
+        if images.len() != expect {
+            bail!(
+                "{name}: input has {} elements, artifact expects {:?} = {expect}",
+                images.len(),
+                entry.info.input_shape
+            );
+        }
+        let dims: Vec<i64> = entry.info.input_shape.iter().map(|d| *d as i64).collect();
+        let input = xla::Literal::vec1(images)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let t0 = Instant::now();
+        let result = entry.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // aot.py lowers with return_tuple=True → 1-tuple of logits.
+        let logits_lit = result.to_tuple1().context("unwrapping result tuple")?;
+        let logits = logits_lit.to_vec::<f32>().context("reading logits")?;
+        let batch = entry.info.output_shape[0];
+        let num_classes = entry.info.output_shape[1];
+        if logits.len() != batch * num_classes {
+            bail!("{name}: got {} logits, expected {}", logits.len(), batch * num_classes);
+        }
+        Ok(InferenceResult { logits, batch, num_classes, execute_ms })
+    }
+
+    /// Convenience: infer via (tier, batch) lookup.
+    pub fn infer_tier(&self, tier: &str, batch: usize, images: &[f32]) -> Result<InferenceResult> {
+        let info = self
+            .manifest
+            .find(tier, batch)
+            .with_context(|| format!("no artifact for tier={tier} batch={batch}"))?;
+        let name = info.name.clone();
+        self.infer(&name, images)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests need built artifacts; they are exercised by the
+    //! integration suite (`rust/tests/integration.rs`) which skips with a
+    //! clear message when `artifacts/` is absent. Pure-logic pieces are
+    //! tested here.
+    use super::*;
+
+    #[test]
+    fn predictions_argmax() {
+        let r = InferenceResult {
+            logits: vec![0.1, 0.9, -1.0, 3.0, 2.0, 2.5],
+            batch: 2,
+            num_classes: 3,
+            execute_ms: 0.0,
+        };
+        assert_eq!(r.predictions(), vec![1, 0]);
+    }
+
+    #[test]
+    fn predictions_single() {
+        let r = InferenceResult { logits: vec![5.0], batch: 1, num_classes: 1, execute_ms: 0.0 };
+        assert_eq!(r.predictions(), vec![0]);
+    }
+}

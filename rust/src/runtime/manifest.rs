@@ -1,0 +1,170 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// One compiled (tier, batch) artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub tier: String,
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Calibrated top-1 accuracy exposed to the scheduler (percent).
+    pub profile_accuracy_pct: f64,
+    pub params: u64,
+    pub flops_per_image: u64,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub image_size: usize,
+    pub image_channels: usize,
+    pub num_classes: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &str, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        if j.get("format").as_str() != Some("hlo-text") {
+            bail!("unsupported artifact format {:?}", j.get("format"));
+        }
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().context("manifest: artifacts[]")? {
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                a.get(key)
+                    .as_arr()
+                    .with_context(|| format!("artifact {key}"))?
+                    .iter()
+                    .map(|v| v.as_usize().context("shape dim"))
+                    .collect()
+            };
+            artifacts.push(ArtifactInfo {
+                name: a.get("name").as_str().context("artifact name")?.to_string(),
+                tier: a.get("tier").as_str().context("artifact tier")?.to_string(),
+                batch: a.get("batch").as_usize().context("artifact batch")?,
+                file: a.get("file").as_str().context("artifact file")?.to_string(),
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                profile_accuracy_pct: a
+                    .get("profile_accuracy_pct")
+                    .as_f64()
+                    .context("profile accuracy")?,
+                params: a.get("params").as_i64().unwrap_or(0) as u64,
+                flops_per_image: a.get("flops_per_image").as_i64().unwrap_or(0) as u64,
+                sha256: a.get("sha256").as_str().unwrap_or("").to_string(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            image_size: j.get("image_size").as_usize().unwrap_or(32),
+            image_channels: j.get("image_channels").as_usize().unwrap_or(3),
+            num_classes: j.get("num_classes").as_usize().unwrap_or(10),
+            artifacts,
+        })
+    }
+
+    /// Artifact for a (tier, batch) pair.
+    pub fn find(&self, tier: &str, batch: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.tier == tier && a.batch == batch)
+    }
+
+    /// Distinct tiers, in manifest (= ladder) order.
+    pub fn tiers(&self) -> Vec<String> {
+        let mut tiers = Vec::new();
+        for a in &self.artifacts {
+            if !tiers.contains(&a.tier) {
+                tiers.push(a.tier.clone());
+            }
+        }
+        tiers
+    }
+
+    /// Batch sizes available for a tier, ascending.
+    pub fn batches_of(&self, tier: &str) -> Vec<usize> {
+        let mut b: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.tier == tier)
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+
+    pub fn path_of(&self, info: &ArtifactInfo) -> String {
+        format!("{}/{}", self.dir, info.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "image_size": 32, "image_channels": 3,
+      "num_classes": 10, "param_seed": 1,
+      "artifacts": [
+        {"name": "edgenet_tiny_b1", "tier": "tiny", "batch": 1,
+         "file": "edgenet_tiny_b1.hlo.txt", "input_shape": [1,32,32,3],
+         "output_shape": [1,10], "profile_accuracy_pct": 40.0,
+         "params": 7162, "flops_per_image": 789696, "sha256": "ab", "bytes": 10},
+        {"name": "edgenet_tiny_b4", "tier": "tiny", "batch": 4,
+         "file": "edgenet_tiny_b4.hlo.txt", "input_shape": [4,32,32,3],
+         "output_shape": [4,10], "profile_accuracy_pct": 40.0,
+         "params": 7162, "flops_per_image": 789696, "sha256": "cd", "bytes": 10},
+        {"name": "edgenet_base_b1", "tier": "base", "batch": 1,
+         "file": "edgenet_base_b1.hlo.txt", "input_shape": [1,32,32,3],
+         "output_shape": [1,10], "profile_accuracy_pct": 63.0,
+         "params": 100000, "flops_per_image": 9000000, "sha256": "ef", "bytes": 10}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse("/tmp/a", SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.image_size, 32);
+        assert_eq!(m.tiers(), vec!["tiny", "base"]);
+        assert_eq!(m.batches_of("tiny"), vec![1, 4]);
+        let a = m.find("tiny", 4).unwrap();
+        assert_eq!(a.input_shape, vec![4, 32, 32, 3]);
+        assert_eq!(m.path_of(a), "/tmp/a/edgenet_tiny_b4.hlo.txt");
+        assert!(m.find("tiny", 8).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse("/tmp", &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_artifacts() {
+        let bad = r#"{"format":"hlo-text","artifacts":[]}"#;
+        assert!(Manifest::parse("/tmp", bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("/tmp", "{nope").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: the PJRT bridge between the rust coordinator and the
+//! AOT-compiled EdgeNet artifacts. Python is build-time only; after
+//! `make artifacts` the serving binary is self-contained.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{InferenceEngine, InferenceResult};
+pub use manifest::{ArtifactInfo, Manifest};

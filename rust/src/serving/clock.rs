@@ -1,0 +1,83 @@
+//! Scaled simulation clock for the live serving runtime.
+//!
+//! The paper's testbed operates on multi-second delays (3 s decision
+//! frames, 1.3 s edge inferences). The serving runtime reproduces those
+//! dynamics in *scaled* time: one simulated millisecond = `1/scale` real
+//! milliseconds, so a full Fig. 1(e)–(h) run finishes in seconds while
+//! preserving every ratio between queueing, communication, processing and
+//! deadline times. `scale = 1.0` runs in true real time.
+
+use std::time::Instant;
+
+/// Monotonic scaled clock shared by all serving threads.
+#[derive(Clone, Copy, Debug)]
+pub struct SimClock {
+    start: Instant,
+    /// Simulated ms per real ms.
+    pub scale: f64,
+}
+
+impl SimClock {
+    pub fn new(scale: f64) -> SimClock {
+        assert!(scale > 0.0);
+        SimClock { start: Instant::now(), scale }
+    }
+
+    /// Current simulated time (ms since start).
+    pub fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3 * self.scale
+    }
+
+    /// Block the calling thread for `sim_ms` simulated milliseconds.
+    pub fn sleep_ms(&self, sim_ms: f64) {
+        if sim_ms <= 0.0 {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(sim_ms / self.scale / 1e3));
+    }
+
+    /// Convert an elapsed real duration to simulated ms.
+    pub fn to_sim_ms(&self, real: std::time::Duration) -> f64 {
+        real.as_secs_f64() * 1e3 * self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_scaled() {
+        let c = SimClock::new(100.0);
+        let t0 = c.now_ms();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let dt = c.now_ms() - t0;
+        // 20 real ms at 100x ≈ 2000 sim ms (generous CI bounds).
+        assert!(dt > 1000.0 && dt < 30_000.0, "dt={dt}");
+    }
+
+    #[test]
+    fn sleep_scales_down() {
+        let c = SimClock::new(1000.0);
+        let t0 = Instant::now();
+        c.sleep_ms(1000.0); // 1 real ms
+        let real = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(real < 200.0, "slept {real} real ms");
+    }
+
+    #[test]
+    fn zero_sleep_returns_immediately() {
+        let c = SimClock::new(1.0);
+        let t0 = Instant::now();
+        c.sleep_ms(0.0);
+        c.sleep_ms(-5.0);
+        assert!(t0.elapsed().as_millis() < 50);
+    }
+
+    #[test]
+    fn to_sim_ms_converts() {
+        let c = SimClock::new(50.0);
+        let d = std::time::Duration::from_millis(10);
+        assert!((c.to_sim_ms(d) - 500.0).abs() < 1e-6);
+    }
+}

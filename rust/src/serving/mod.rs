@@ -1,0 +1,593 @@
+//! The live serving runtime — the paper's Raspberry-Pi testbed rebuilt as
+//! a concurrent rust system with *real* model execution (DESIGN.md
+//! §Substitutions):
+//!
+//! * users submit image-classification requests to their covering edge
+//!   server's bounded admission queue (paper: queue length 4);
+//! * a leader runs the configured [`Scheduler`] every decision frame
+//!   (paper: 3000 ms) or as soon as a queue fills;
+//! * decisions dispatch to server nodes — local, peer edge, or cloud —
+//!   over simulated wireless links whose realized bandwidth feeds the
+//!   paper's `E[B_{t+1}] = (B_t + B_{t-1})/2` estimator;
+//! * every served request runs real EdgeNet inference through PJRT on the
+//!   node's engine thread, embedded in the node's calibrated
+//!   processing-delay profile (edge ≈ 1300 ms, cloud ≈ 300 ms);
+//! * satisfaction is scored exactly as in Def. II.1 against the request's
+//!   (A_i, C_i).
+//!
+//! Everything runs in scaled simulated time (see [`clock::SimClock`]) so
+//! a two-hour-equivalent run takes seconds while preserving every ratio.
+
+pub mod clock;
+pub mod node;
+
+use crate::coordinator::us::Assignment;
+use crate::coordinator::{scheduler_by_name, Schedule, Scheduler};
+use crate::metrics::ServingMetrics;
+use crate::model::request::Request;
+use crate::model::server::{Server, ServerClass};
+use crate::model::service::{Placement, ServiceCatalog, ServiceId, TierId, TierProfile};
+use crate::model::topology::Topology;
+use crate::model::ProblemInstance;
+use crate::net::{BandwidthEstimator, Link};
+use crate::runtime::Manifest;
+use crate::serving::clock::SimClock;
+use crate::serving::node::{Completion, ExecJob, ServerNode};
+use crate::sim::{AdmissionQueue, FrameClock};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+/// Configuration of one serving run (paper testbed defaults).
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    pub artifacts_dir: String,
+    /// Edge servers (paper testbed: 2 RP4s).
+    pub num_edge: usize,
+    /// Tiers placed on each edge (SqueezeNet-class models).
+    pub edge_tiers: Vec<String>,
+    /// Tiers placed on the cloud (empty = all manifest tiers).
+    pub cloud_tiers: Vec<String>,
+    /// Scheduling policy name (`gus`, `random`, `local-all`, ...).
+    pub scheduler: String,
+    /// Total requests to generate.
+    pub total_requests: usize,
+    /// Arrival window: requests arrive Poisson over this span (sim ms).
+    pub window_ms: f64,
+    /// Decision frame (paper: 3000 ms).
+    pub frame_ms: f64,
+    /// Admission queue capacity per edge (paper: 4).
+    pub queue_capacity: usize,
+    /// Executor workers per edge (paper: 3 threads).
+    pub gamma_edge: usize,
+    pub gamma_cloud: usize,
+    /// Images forwardable per edge per frame (paper: 10).
+    pub eta_edge: f64,
+    pub eta_cloud: f64,
+    /// QoS thresholds, fixed for all requests as in the paper.
+    pub min_accuracy_pct: f64,
+    pub deadline_ms: f64,
+    /// Calibrated processing delays for the fastest tier (ms).
+    pub edge_proc_base_ms: f64,
+    pub cloud_proc_base_ms: f64,
+    /// Per-tier-step processing slowdown.
+    pub tier_slowdown: f64,
+    /// Simulated ms per real ms (1.0 = real time).
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".into(),
+            num_edge: 2,
+            edge_tiers: vec!["tiny".into(), "small".into()],
+            cloud_tiers: Vec::new(),
+            scheduler: "gus".into(),
+            total_requests: 120,
+            window_ms: 60_000.0,
+            frame_ms: 3_000.0,
+            queue_capacity: 4,
+            gamma_edge: 3,
+            gamma_cloud: 8,
+            eta_edge: 10.0,
+            eta_cloud: 48.0,
+            min_accuracy_pct: 50.0,
+            deadline_ms: 5_300.0,
+            edge_proc_base_ms: 1_300.0,
+            cloud_proc_base_ms: 300.0,
+            tier_slowdown: 1.10,
+            time_scale: 50.0,
+            seed: 7,
+        }
+    }
+}
+
+/// A generated user request while it waits for a decision.
+struct ServeRequest {
+    id: u64,
+    arrival_sim_ms: f64,
+    payload_bytes: u64,
+    images: Vec<f32>,
+}
+
+/// The assembled serving system.
+pub struct ServingSystem {
+    cfg: ServingConfig,
+    manifest: Manifest,
+    tiers: Vec<String>,
+}
+
+impl ServingSystem {
+    pub fn new(cfg: ServingConfig) -> Result<ServingSystem> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let tiers = manifest.tiers();
+        for t in cfg.edge_tiers.iter().chain(cfg.cloud_tiers.iter()) {
+            if !tiers.contains(t) {
+                anyhow::bail!("tier {t} not in manifest (has {tiers:?})");
+            }
+        }
+        Ok(ServingSystem { cfg, manifest, tiers })
+    }
+
+    /// The scheduler-visible catalog: one service ("classify") whose tiers
+    /// are the real compiled artifacts, with paper-calibrated delays.
+    fn catalog(&self) -> ServiceCatalog {
+        let cfg = &self.cfg;
+        let profiles: Vec<TierProfile> = self
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, tier)| {
+                let acc = self
+                    .manifest
+                    .find(tier, 1)
+                    .map(|a| a.profile_accuracy_pct)
+                    .unwrap_or(50.0);
+                let slow = cfg.tier_slowdown.powi(i as i32);
+                let mut proc = [0.0; ServerClass::COUNT];
+                for (ci, speed) in [1.15, 1.0, 0.85].iter().enumerate() {
+                    proc[ci] = cfg.edge_proc_base_ms * slow * speed;
+                }
+                proc[ServerClass::Cloud.index()] = cfg.cloud_proc_base_ms * slow;
+                TierProfile {
+                    accuracy_pct: acc,
+                    proc_ms: proc,
+                    comp_cost: 1.0,
+                    comm_cost: 1.0,
+                    model_bytes: 0,
+                }
+            })
+            .collect();
+        ServiceCatalog::from_profiles(vec![profiles])
+    }
+
+    fn placement(&self) -> Placement {
+        let cfg = &self.cfg;
+        let tier_idx = |name: &str| TierId(self.tiers.iter().position(|t| t == name).unwrap());
+        let mut on = Vec::new();
+        let mut cloud_flags = Vec::new();
+        for _ in 0..cfg.num_edge {
+            let mut pairs: Vec<(ServiceId, TierId)> =
+                cfg.edge_tiers.iter().map(|t| (ServiceId(0), tier_idx(t))).collect();
+            pairs.sort();
+            on.push(pairs);
+            cloud_flags.push(false);
+        }
+        // Cloud: explicit tier list, or everything.
+        if cfg.cloud_tiers.is_empty() {
+            on.push(Vec::new());
+            cloud_flags.push(true);
+        } else {
+            let mut pairs: Vec<(ServiceId, TierId)> =
+                cfg.cloud_tiers.iter().map(|t| (ServiceId(0), tier_idx(t))).collect();
+            pairs.sort();
+            on.push(pairs);
+            cloud_flags.push(false);
+        }
+        Placement::explicit(on, cloud_flags)
+    }
+
+    fn cloud_tier_names(&self) -> Vec<String> {
+        if self.cfg.cloud_tiers.is_empty() {
+            self.tiers.clone()
+        } else {
+            self.cfg.cloud_tiers.clone()
+        }
+    }
+
+    /// Run to completion; returns the end-to-end metrics.
+    pub fn run(&self) -> Result<ServingMetrics> {
+        let cfg = &self.cfg;
+        let scheduler: Box<dyn Scheduler + Send + Sync> = scheduler_by_name(&cfg.scheduler)
+            .with_context(|| format!("unknown scheduler {}", cfg.scheduler))?;
+        let clock = SimClock::new(cfg.time_scale);
+        let catalog = self.catalog();
+        let placement = self.placement();
+        let cloud_id = cfg.num_edge; // last server
+        let num_servers = cfg.num_edge + 1;
+
+        // Metrics plumbing.
+        let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
+        let finished = Arc::new(AtomicUsize::new(0));
+        let (completion_tx, completion_rx) = channel::<(Completion, f64, f64)>();
+
+        // Collector thread: scores Def. II.1 satisfaction per completion.
+        let collector = {
+            let metrics = Arc::clone(&metrics);
+            let finished = Arc::clone(&finished);
+            std::thread::spawn(move || {
+                while let Ok((c, a_min, c_max)) = completion_rx.recv() {
+                    let mut m = metrics.lock().unwrap();
+                    m.served += 1;
+                    if c.accuracy_pct >= a_min && c.completion_ms <= c_max {
+                        m.satisfied += 1;
+                    }
+                    if c.served_local {
+                        m.local += 1;
+                    } else if c.served_by_cloud {
+                        m.offload_cloud += 1;
+                    } else {
+                        m.offload_peer += 1;
+                    }
+                    m.latency.record(c.completion_ms);
+                    m.inference.record(c.inference_real_ms.max(1e-3));
+                    drop(m);
+                    finished.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+        };
+
+        // Wrap node completions with the fixed QoS thresholds.
+        let (node_tx, node_rx) = channel::<Completion>();
+        let qos_fwd = {
+            let completion_tx = completion_tx.clone();
+            let a_min = cfg.min_accuracy_pct;
+            let c_max = cfg.deadline_ms;
+            std::thread::spawn(move || {
+                while let Ok(c) = node_rx.recv() {
+                    let _ = completion_tx.send((c, a_min, c_max));
+                }
+            })
+        };
+
+        // Spawn server nodes (edges cycle through classes, like the sim).
+        let mut nodes: Vec<Arc<ServerNode>> = Vec::new();
+        for e in 0..cfg.num_edge {
+            let class = ServerClass::EDGE_CLASSES[e % 3];
+            nodes.push(Arc::new(ServerNode::spawn(
+                e,
+                class,
+                &cfg.artifacts_dir,
+                cfg.edge_tiers.clone(),
+                cfg.gamma_edge,
+                clock,
+                node_tx.clone(),
+            )?));
+        }
+        nodes.push(Arc::new(ServerNode::spawn(
+            cloud_id,
+            ServerClass::Cloud,
+            &cfg.artifacts_dir,
+            self.cloud_tier_names(),
+            cfg.gamma_cloud,
+            clock,
+            node_tx.clone(),
+        )?));
+        drop(node_tx);
+
+        // Admission queues.
+        let queues: Vec<Arc<Mutex<AdmissionQueue<ServeRequest>>>> = (0..cfg.num_edge)
+            .map(|_| Arc::new(Mutex::new(AdmissionQueue::new(cfg.queue_capacity))))
+            .collect();
+
+        // Request generator.
+        let generated = Arc::new(AtomicU64::new(0));
+        let image_len = self.manifest.image_size * self.manifest.image_size
+            * self.manifest.image_channels;
+        let generator = {
+            let queues: Vec<_> = queues.iter().map(Arc::clone).collect();
+            let metrics = Arc::clone(&metrics);
+            let finished = Arc::clone(&finished);
+            let generated = Arc::clone(&generated);
+            let total = cfg.total_requests;
+            let window = cfg.window_ms;
+            let seed = cfg.seed;
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                let mean_gap = window / total.max(1) as f64;
+                for id in 0..total as u64 {
+                    // Poisson arrivals: exponential inter-arrival gaps.
+                    let gap = -mean_gap * (1.0 - rng.f64()).ln();
+                    clock.sleep_ms(gap.min(mean_gap * 10.0));
+                    let edge = rng.index(queues.len());
+                    let images: Vec<f32> = (0..image_len).map(|_| rng.f64() as f32).collect();
+                    let req = ServeRequest {
+                        id,
+                        arrival_sim_ms: clock.now_ms(),
+                        payload_bytes: rng.u64_range(8_000, 20_000),
+                        images,
+                    };
+                    generated.fetch_add(1, Ordering::SeqCst);
+                    let admitted = queues[edge].lock().unwrap().push(req, clock.now_ms());
+                    if !admitted {
+                        let mut m = metrics.lock().unwrap();
+                        m.dropped += 1;
+                        drop(m);
+                        finished.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            })
+        };
+
+        // Network links + bandwidth estimator (edge↔cloud path).
+        let edge_cloud_link = Link::edge_cloud_default();
+        let edge_edge_link = Link::edge_edge_default();
+        let mut estimator = BandwidthEstimator::new(600.0);
+
+        // Leader loop: decision frames.
+        let mut frame = FrameClock::new(cfg.frame_ms);
+        let mut leader_rng = Rng::new(cfg.seed ^ 0xD15BA7C4);
+        let real_tick = std::time::Duration::from_secs_f64(
+            (cfg.frame_ms / cfg.time_scale / 1e3 / 20.0).max(0.0005),
+        );
+        let mut dispatch_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        loop {
+            let done = finished.load(Ordering::SeqCst) >= cfg.total_requests;
+            if done {
+                break;
+            }
+            std::thread::sleep(real_tick);
+            let now = clock.now_ms();
+            let any_full = queues.iter().any(|q| q.lock().unwrap().is_full());
+            let any_waiting = queues.iter().any(|q| !q.lock().unwrap().is_empty());
+            if !frame.should_fire(now, any_full) || !any_waiting {
+                continue;
+            }
+            frame.fired(now);
+
+            // Drain all queues into one joint decision problem.
+            let mut pending: Vec<(usize, ServeRequest, f64)> = Vec::new();
+            for (e, q) in queues.iter().enumerate() {
+                for (req, tq) in q.lock().unwrap().drain(now) {
+                    pending.push((e, req, tq));
+                }
+            }
+            if pending.is_empty() {
+                continue;
+            }
+
+            // Build the scheduler's instance with residual capacities.
+            let mut servers = Vec::with_capacity(num_servers);
+            for (j, node) in nodes.iter().enumerate() {
+                let base_gamma =
+                    if j == cloud_id { cfg.gamma_cloud } else { cfg.gamma_edge } as f64;
+                let free = (base_gamma - node.inflight() as f64).max(0.0);
+                let eta = if j == cloud_id { cfg.eta_cloud } else { cfg.eta_edge };
+                servers.push(Server::new(j, node.class).with_capacities(free, eta));
+            }
+            // Comm matrix from the current bandwidth estimate.
+            let mean_payload = 14_000u64;
+            let cloud_ms = estimator.expected_delay_ms(mean_payload) + edge_cloud_link.propagation_ms;
+            let edge_ms = edge_edge_link.expected_delay_ms(mean_payload);
+            let mut comm = vec![vec![0.0; num_servers]; num_servers];
+            for a in 0..num_servers {
+                for b in 0..num_servers {
+                    if a == b {
+                        continue;
+                    }
+                    comm[a][b] =
+                        if a == cloud_id || b == cloud_id { cloud_ms } else { edge_ms };
+                }
+            }
+            let topology = Topology::explicit(servers, comm);
+            let requests: Vec<Request> = pending
+                .iter()
+                .enumerate()
+                .map(|(i, (e, req, tq))| {
+                    Request::new(i, 0, *e)
+                        .with_qos(cfg.min_accuracy_pct, cfg.deadline_ms)
+                        .with_queue_delay(*tq)
+                        .with_payload(req.payload_bytes)
+                })
+                .collect();
+            let inst = ProblemInstance::new(topology, catalog.clone(), placement.clone(), requests)
+                .with_normalization(100.0, 12_000.0);
+            let schedule: Schedule = scheduler.schedule(&inst, &mut leader_rng);
+
+            // Dispatch.
+            for (i, (_e, req, _tq)) in pending.into_iter().enumerate() {
+                match &schedule.slots[i] {
+                    None => {
+                        let mut m = metrics.lock().unwrap();
+                        m.dropped += 1;
+                        drop(m);
+                        finished.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Some(a) => {
+                        self.dispatch(
+                            a,
+                            req,
+                            &nodes,
+                            cloud_id,
+                            clock,
+                            &edge_cloud_link,
+                            &edge_edge_link,
+                            &mut estimator,
+                            &mut leader_rng,
+                            &mut dispatch_threads,
+                        );
+                    }
+                }
+            }
+            // Reap finished transfer threads opportunistically.
+            dispatch_threads.retain(|h| !h.is_finished());
+        }
+
+        generator.join().expect("generator panicked");
+        for h in dispatch_threads {
+            let _ = h.join();
+        }
+        // Shut down nodes (drops engine threads), then the collector.
+        for node in nodes {
+            match Arc::try_unwrap(node) {
+                Ok(n) => n.shutdown(),
+                Err(_) => {} // a transfer thread still holds it; it exits on its own
+            }
+        }
+        let _ = qos_fwd.join();
+        drop(completion_tx);
+        let _ = collector.join();
+
+        let mut m = Arc::try_unwrap(metrics)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+        m.total_requests = cfg.total_requests as u64;
+        m.wall_ms = clock.now_ms();
+        Ok(m)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &self,
+        a: &Assignment,
+        req: ServeRequest,
+        nodes: &[Arc<ServerNode>],
+        cloud_id: usize,
+        clock: SimClock,
+        edge_cloud_link: &Link,
+        edge_edge_link: &Link,
+        estimator: &mut BandwidthEstimator,
+        rng: &mut Rng,
+        transfers: &mut Vec<std::thread::JoinHandle<()>>,
+    ) {
+        let tier_name = self.tiers[a.candidate.tier.0].clone();
+        let target = Arc::clone(&nodes[a.candidate.server.0]);
+        let profile_proc = {
+            let class = target.class;
+            // Same calibration as `catalog()`.
+            let slow = self.cfg.tier_slowdown.powi(a.candidate.tier.0 as i32);
+            if class.is_cloud() {
+                self.cfg.cloud_proc_base_ms * slow
+            } else {
+                let speed = [1.15, 1.0, 0.85][class.index()];
+                self.cfg.edge_proc_base_ms * slow * speed
+            }
+        };
+        let job = ExecJob {
+            request_id: req.id,
+            arrival_sim_ms: req.arrival_sim_ms,
+            tier: tier_name,
+            proc_ms: profile_proc,
+            accuracy_pct: a.candidate.accuracy_pct,
+            images: req.images,
+            served_local: !a.candidate.offloaded,
+        };
+        if !a.candidate.offloaded {
+            target.submit(job);
+            return;
+        }
+        // Offload: sample the real link, feed the estimator, and forward
+        // after the (scaled) transfer delay.
+        let link = if a.candidate.server.0 == cloud_id { edge_cloud_link } else { edge_edge_link };
+        let (delay_ms, realized_bw) = link.transfer(req.payload_bytes, rng);
+        if a.candidate.server.0 == cloud_id {
+            estimator.observe(realized_bw);
+        }
+        transfers.push(std::thread::spawn(move || {
+            clock.sleep_ms(delay_ms);
+            target.submit(job);
+        }));
+    }
+}
+
+/// Fig. 1(e)–(h): sweep the offered load for each policy on the live
+/// system, reporting satisfied / local / cloud / peer percentages.
+pub struct TestbedExperiment {
+    pub base: ServingConfig,
+    pub policies: Vec<String>,
+    pub loads: Vec<usize>,
+}
+
+impl Default for TestbedExperiment {
+    fn default() -> Self {
+        TestbedExperiment {
+            base: ServingConfig::default(),
+            policies: vec![
+                "gus".into(),
+                "random".into(),
+                "local-all".into(),
+                "offload-all".into(),
+            ],
+            loads: vec![60, 120, 240, 360],
+        }
+    }
+}
+
+/// Result of the testbed sweep: one series per panel (e)–(h).
+pub struct TestbedResult {
+    pub satisfied: crate::metrics::Series,
+    pub local: crate::metrics::Series,
+    pub cloud: crate::metrics::Series,
+    pub peer: crate::metrics::Series,
+    /// Raw metrics per (policy, load).
+    pub raw: Vec<(String, usize, ServingMetrics)>,
+}
+
+impl TestbedExperiment {
+    pub fn run(&self) -> Result<TestbedResult> {
+        let xs: Vec<f64> = self.loads.iter().map(|l| *l as f64).collect();
+        let mut satisfied = crate::metrics::Series::new("requests", "satisfied users (%)", xs.clone());
+        let mut local = crate::metrics::Series::new("requests", "locally processed (%)", xs.clone());
+        let mut cloud = crate::metrics::Series::new("requests", "offloaded to cloud (%)", xs.clone());
+        let mut peer = crate::metrics::Series::new("requests", "offloaded to peers (%)", xs);
+        let nan = vec![f64::NAN; self.loads.len()];
+        let mut raw = Vec::new();
+        for policy in &self.policies {
+            let mut s = Vec::new();
+            let mut l = Vec::new();
+            let mut c = Vec::new();
+            let mut p = Vec::new();
+            for &load in &self.loads {
+                let mut cfg = self.base.clone();
+                cfg.scheduler = policy.clone();
+                cfg.total_requests = load;
+                let metrics = ServingSystem::new(cfg)?.run()?;
+                s.push(metrics.satisfied_pct());
+                l.push(metrics.local_pct());
+                c.push(metrics.cloud_pct());
+                p.push(metrics.peer_pct());
+                raw.push((policy.clone(), load, metrics));
+            }
+            satisfied.push_policy(policy, s, nan.clone());
+            local.push_policy(policy, l, nan.clone());
+            cloud.push_policy(policy, c, nan.clone());
+            peer.push_policy(policy, p, nan.clone());
+        }
+        Ok(TestbedResult { satisfied, local, cloud, peer, raw })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_paper_calibrated() {
+        let c = ServingConfig::default();
+        assert_eq!(c.num_edge, 2);
+        assert_eq!(c.queue_capacity, 4);
+        assert_eq!(c.frame_ms, 3000.0);
+        assert_eq!(c.gamma_edge, 3);
+        assert_eq!(c.eta_edge, 10.0);
+        assert_eq!(c.min_accuracy_pct, 50.0);
+        assert_eq!(c.edge_proc_base_ms, 1300.0);
+        assert_eq!(c.cloud_proc_base_ms, 300.0);
+    }
+
+    // Full-system tests live in rust/tests/serving_e2e.rs (they need the
+    // compiled artifacts).
+}

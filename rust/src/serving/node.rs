@@ -1,0 +1,276 @@
+//! Server nodes of the live serving runtime: each node owns a PJRT
+//! inference thread (loading only its placed artifacts) and a pool of γ
+//! executor workers that emulate the node's processing-delay profile
+//! while running *real* EdgeNet inference for every request.
+
+use crate::model::server::ServerClass;
+use crate::runtime::InferenceEngine;
+use crate::serving::clock::SimClock;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// An inference request sent to a node's PJRT thread.
+pub struct InferJob {
+    pub tier: String,
+    pub images: Vec<f32>,
+    pub reply: Sender<anyhow::Result<crate::runtime::InferenceResult>>,
+}
+
+/// Handle to a pool of threads each owning an [`InferenceEngine`].
+///
+/// The xla types are not `Sync`; confining them to dedicated threads
+/// keeps the rest of the system plain `Send` channels. A pool (rather
+/// than a single engine thread) lets a node's γ executor workers overlap
+/// real PJRT executions, matching the paper's multi-threaded testbed
+/// servers.
+pub struct InferenceHandle {
+    tx: Sender<InferJob>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl InferenceHandle {
+    /// Spawn one engine thread (see [`InferenceHandle::spawn_pool`]).
+    pub fn spawn(artifacts_dir: &str, tiers: Vec<String>) -> anyhow::Result<InferenceHandle> {
+        Self::spawn_pool(artifacts_dir, tiers, 1)
+    }
+
+    /// Spawn `n` engine threads sharing one job queue, each loading the
+    /// batch-1 artifacts for `tiers`.
+    pub fn spawn_pool(
+        artifacts_dir: &str,
+        tiers: Vec<String>,
+        n: usize,
+    ) -> anyhow::Result<InferenceHandle> {
+        assert!(n > 0);
+        let (tx, rx): (Sender<InferJob>, Receiver<InferJob>) = channel();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let mut joins = Vec::with_capacity(n);
+        for t in 0..n {
+            let dir = artifacts_dir.to_string();
+            let tiers = tiers.clone();
+            let rx = Arc::clone(&shared_rx);
+            let ready_tx = ready_tx.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-engine{t}"))
+                    .spawn(move || {
+                        let engine = match InferenceEngine::load_filtered(&dir, |a| {
+                            a.batch == 1 && tiers.iter().any(|t| *t == a.tier)
+                        }) {
+                            Ok(e) => e,
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        };
+                        // Warm-up before signalling ready: first
+                        // executions pay one-time buffer/layout costs
+                        // that must not leak into the serving budget.
+                        let warm = vec![0.0f32; engine.manifest.image_size
+                            * engine.manifest.image_size
+                            * engine.manifest.image_channels];
+                        for tier in engine.manifest.tiers() {
+                            if engine
+                                .manifest
+                                .find(&tier, 1)
+                                .map(|a| engine.has(&a.name))
+                                .unwrap_or(false)
+                            {
+                                let _ = engine.infer_tier(&tier, 1, &warm);
+                            }
+                        }
+                        let _ = ready_tx.send(Ok(()));
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            let Ok(job) = job else { break };
+                            let result = engine.infer_tier(&job.tier, 1, &job.images);
+                            let _ = job.reply.send(result);
+                        }
+                    })?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..n {
+            ready_rx.recv().expect("engine thread died during load")?;
+        }
+        Ok(InferenceHandle { tx, joins })
+    }
+
+    /// Run one image synchronously through the node's engine.
+    pub fn infer(
+        &self,
+        tier: &str,
+        images: Vec<f32>,
+    ) -> anyhow::Result<crate::runtime::InferenceResult> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(InferJob { tier: tier.to_string(), images, reply })
+            .map_err(|_| anyhow::anyhow!("inference thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("inference thread dropped reply"))?
+    }
+
+    pub fn sender(&self) -> Sender<InferJob> {
+        self.tx.clone()
+    }
+}
+
+impl Drop for InferenceHandle {
+    fn drop(&mut self) {
+        // Close the channel, then join the engine threads.
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One executed request, reported to the metrics collector.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_id: u64,
+    /// Simulated end-to-end completion time (arrival → logits), ms.
+    pub completion_ms: f64,
+    /// Profile accuracy of the tier that served it (percent).
+    pub accuracy_pct: f64,
+    /// Real PJRT execute latency (ms, unscaled).
+    pub inference_real_ms: f64,
+    pub served_local: bool,
+    pub served_by_cloud: bool,
+    pub predicted_class: usize,
+}
+
+/// A job dispatched to a node's executor pool.
+pub struct ExecJob {
+    pub request_id: u64,
+    /// Simulated arrival time at the covering edge (ms).
+    pub arrival_sim_ms: f64,
+    /// Tier chosen by the scheduler.
+    pub tier: String,
+    /// Profile processing delay to emulate for this (tier, node) pair, ms.
+    pub proc_ms: f64,
+    pub accuracy_pct: f64,
+    pub images: Vec<f32>,
+    pub served_local: bool,
+}
+
+/// A running server node: γ executor workers + 1 PJRT thread.
+pub struct ServerNode {
+    pub id: usize,
+    pub class: ServerClass,
+    pub tiers: Vec<String>,
+    job_tx: Sender<ExecJob>,
+    /// Jobs admitted but not yet completed (executor queue + in service).
+    inflight: Arc<AtomicUsize>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    _engine: InferenceHandle,
+}
+
+impl ServerNode {
+    /// Spawn the node. `gamma` = executor workers (the paper testbed used
+    /// 3 inference threads per edge); the engine pool is sized so γ
+    /// concurrent requests do not serialize behind one PJRT thread.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        id: usize,
+        class: ServerClass,
+        artifacts_dir: &str,
+        tiers: Vec<String>,
+        gamma: usize,
+        clock: SimClock,
+        completions: Sender<Completion>,
+    ) -> anyhow::Result<ServerNode> {
+        assert!(gamma > 0);
+        let engines = gamma.min(4);
+        let engine = InferenceHandle::spawn_pool(artifacts_dir, tiers.clone(), engines)?;
+        let (job_tx, job_rx) = channel::<ExecJob>();
+        let shared_rx = Arc::new(Mutex::new(job_rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let is_cloud = class.is_cloud();
+        let mut workers = Vec::with_capacity(gamma);
+        for w in 0..gamma {
+            let rx = Arc::clone(&shared_rx);
+            let engine_tx = engine.sender();
+            let completions = completions.clone();
+            let inflight = Arc::clone(&inflight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("node{id}-exec{w}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        let t0 = Instant::now();
+                        // Real inference through PJRT.
+                        let (reply, reply_rx) = channel();
+                        let infer_ms;
+                        let mut predicted = 0usize;
+                        if engine_tx
+                            .send(InferJob { tier: job.tier.clone(), images: job.images, reply })
+                            .is_ok()
+                        {
+                            match reply_rx.recv() {
+                                Ok(Ok(res)) => {
+                                    infer_ms = res.execute_ms;
+                                    predicted = res.predictions()[0];
+                                }
+                                _ => infer_ms = 0.0,
+                            }
+                        } else {
+                            infer_ms = 0.0;
+                        }
+                        // Emulate the node's calibrated processing delay:
+                        // the real inference time counts toward it.
+                        let spent_sim = clock.to_sim_ms(t0.elapsed());
+                        clock.sleep_ms(job.proc_ms - spent_sim);
+                        let completion_ms = clock.now_ms() - job.arrival_sim_ms;
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                        let _ = completions.send(Completion {
+                            request_id: job.request_id,
+                            completion_ms,
+                            accuracy_pct: job.accuracy_pct,
+                            inference_real_ms: infer_ms,
+                            served_local: job.served_local,
+                            served_by_cloud: is_cloud,
+                            predicted_class: predicted,
+                        });
+                    })?,
+            );
+        }
+        Ok(ServerNode { id, class, tiers, job_tx, inflight, workers, _engine: engine })
+    }
+
+    /// Enqueue a job on this node's executor pool.
+    pub fn submit(&self, job: ExecJob) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.job_tx.send(job).is_err() {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Jobs admitted but not yet finished.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    pub fn inflight_handle(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.inflight)
+    }
+
+    /// Close the job queue and join the workers.
+    pub fn shutdown(mut self) {
+        let (tx, _) = channel();
+        drop(std::mem::replace(&mut self.job_tx, tx));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

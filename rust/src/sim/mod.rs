@@ -1,0 +1,10 @@
+//! Simulation substrate: admission queueing / decision frames and the
+//! Monte-Carlo harness behind the paper's numerical results (Fig. 1 a–d).
+
+pub mod des;
+pub mod montecarlo;
+pub mod queueing;
+
+pub use des::{Des, DesConfig, DesReport};
+pub use montecarlo::{MonteCarlo, PolicyStats};
+pub use queueing::{AdmissionQueue, FrameClock};

@@ -1,0 +1,203 @@
+//! Monte-Carlo harness for the numerical experiments (§IV: "we run each
+//! test for 20000 Monte-Carlo runs and report the average").
+//!
+//! Each run draws a fresh instance from `ScenarioParams` (new topology
+//! jitter, catalog, placement and request population), schedules it with
+//! every policy under test, and accumulates the per-policy metrics.
+//! Runs are distributed across OS threads; every run's RNG is seeded from
+//! (base_seed, run_index) so results are independent of thread count.
+
+use crate::coordinator::{all_schedulers, Scheduler};
+use crate::model::ProblemInstance;
+use crate::util::rng::Rng;
+use crate::util::stats::Accumulator;
+use crate::workload::{build_instance, ScenarioParams};
+
+/// Per-policy aggregated metrics over all runs.
+#[derive(Clone, Debug, Default)]
+pub struct PolicyStats {
+    pub name: String,
+    pub satisfied_pct: Accumulator,
+    pub served_pct: Accumulator,
+    pub objective: Accumulator,
+    /// Decision mix (percent): local / cloud / peer / dropped.
+    pub mix_local: Accumulator,
+    pub mix_cloud: Accumulator,
+    pub mix_peer: Accumulator,
+    pub mix_dropped: Accumulator,
+}
+
+impl PolicyStats {
+    fn record(&mut self, inst: &ProblemInstance, schedule: &crate::coordinator::Schedule) {
+        let n = inst.num_requests().max(1) as f64;
+        self.satisfied_pct.push(schedule.satisfied_pct(inst));
+        self.served_pct.push(100.0 * schedule.served() as f64 / n);
+        self.objective.push(schedule.objective());
+        let mix = schedule.decision_mix_pct(inst);
+        self.mix_local.push(mix[0]);
+        self.mix_cloud.push(mix[1]);
+        self.mix_peer.push(mix[2]);
+        self.mix_dropped.push(mix[3]);
+    }
+
+    fn merge(&mut self, other: &PolicyStats) {
+        self.satisfied_pct.merge(&other.satisfied_pct);
+        self.served_pct.merge(&other.served_pct);
+        self.objective.merge(&other.objective);
+        self.mix_local.merge(&other.mix_local);
+        self.mix_cloud.merge(&other.mix_cloud);
+        self.mix_peer.merge(&other.mix_peer);
+        self.mix_dropped.merge(&other.mix_dropped);
+    }
+}
+
+/// Configuration of one Monte-Carlo experiment.
+#[derive(Clone, Debug)]
+pub struct MonteCarlo {
+    pub scenario: ScenarioParams,
+    pub runs: usize,
+    pub base_seed: u64,
+    pub threads: usize,
+}
+
+impl Default for MonteCarlo {
+    fn default() -> Self {
+        MonteCarlo {
+            scenario: ScenarioParams::default(),
+            runs: 200,
+            base_seed: 7,
+            threads: default_threads(),
+        }
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+impl MonteCarlo {
+    /// Run with the standard six policies.
+    pub fn run(&self) -> Vec<PolicyStats> {
+        self.run_with(&all_schedulers)
+    }
+
+    /// Run with a custom policy set (factory is invoked per worker thread
+    /// — trait objects are not Sync-shareable across scheduling calls
+    /// with interior state).
+    pub fn run_with(
+        &self,
+        factory: &(dyn Fn() -> Vec<Box<dyn Scheduler + Send + Sync>> + Sync),
+    ) -> Vec<PolicyStats> {
+        let threads = self.threads.max(1).min(self.runs.max(1));
+        let runs = self.runs;
+        let chunk = runs.div_ceil(threads);
+        let mut partials: Vec<Vec<PolicyStats>> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(runs);
+                if lo >= hi {
+                    continue;
+                }
+                let scenario = self.scenario.clone();
+                let base_seed = self.base_seed;
+                handles.push(scope.spawn(move || {
+                    let schedulers = factory();
+                    let mut stats: Vec<PolicyStats> = schedulers
+                        .iter()
+                        .map(|s| PolicyStats { name: s.name().to_string(), ..Default::default() })
+                        .collect();
+                    for run in lo..hi {
+                        // Per-run deterministic seed, independent of threads.
+                        let mut rng =
+                            Rng::new(base_seed ^ (run as u64).wrapping_mul(0xA24BAED4963EE407));
+                        let inst = build_instance(&scenario, &mut rng);
+                        for (si, sched) in schedulers.iter().enumerate() {
+                            let mut srng = rng.fork(si as u64);
+                            let schedule = sched.schedule(&inst, &mut srng);
+                            stats[si].record(&inst, &schedule);
+                        }
+                    }
+                    stats
+                }));
+            }
+            for h in handles {
+                partials.push(h.join().expect("monte-carlo worker panicked"));
+            }
+        });
+        let mut merged: Vec<PolicyStats> = Vec::new();
+        for part in partials {
+            if merged.is_empty() {
+                merged = part;
+            } else {
+                for (m, p) in merged.iter_mut().zip(part.iter()) {
+                    debug_assert_eq!(m.name, p.name);
+                    m.merge(p);
+                }
+            }
+        }
+        merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::service::CatalogParams;
+    use crate::model::topology::TopologyParams;
+    use crate::workload::WorkloadParams;
+
+    fn quick() -> MonteCarlo {
+        MonteCarlo {
+            scenario: ScenarioParams {
+                topology: TopologyParams { num_edge: 4, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 10, num_tiers: 4, ..Default::default() },
+                workload: WorkloadParams { num_requests: 30, ..Default::default() },
+            },
+            runs: 16,
+            base_seed: 3,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn aggregates_all_policies() {
+        let stats = quick().run();
+        assert_eq!(stats.len(), 6);
+        for s in &stats {
+            assert_eq!(s.satisfied_pct.count(), 16);
+            assert!(s.satisfied_pct.mean() >= 0.0 && s.satisfied_pct.mean() <= 100.0);
+            let mix_sum = s.mix_local.mean() + s.mix_cloud.mean() + s.mix_peer.mean()
+                + s.mix_dropped.mean();
+            assert!((mix_sum - 100.0).abs() < 1e-6, "{}: mix sums to {mix_sum}", s.name);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut a = quick();
+        a.threads = 1;
+        let mut b = quick();
+        b.threads = 8;
+        let ra = a.run();
+        let rb = b.run();
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.name, y.name);
+            assert!((x.satisfied_pct.mean() - y.satisfied_pct.mean()).abs() < 1e-9);
+            assert!((x.objective.mean() - y.objective.mean()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gus_beats_naive_baselines_on_average() {
+        let mut mc = quick();
+        mc.runs = 24;
+        let stats = mc.run();
+        let by_name = |n: &str| stats.iter().find(|s| s.name == n).unwrap();
+        let gus = by_name("gus").satisfied_pct.mean();
+        assert!(gus >= by_name("random").satisfied_pct.mean());
+        assert!(gus >= by_name("offload-all").satisfied_pct.mean());
+        assert!(gus >= by_name("local-all").satisfied_pct.mean());
+    }
+}

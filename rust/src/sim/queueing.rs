@@ -1,0 +1,146 @@
+//! Admission-control queueing (paper §II "Completion time"): requests
+//! arriving at an edge server wait in a bounded admission queue until the
+//! end of the decision time frame (or until the queue fills), accruing
+//! queuing delay T^q. The serving path uses this directly; the numerical
+//! experiments draw T^q from its marginal distribution instead.
+
+/// One queued request with its arrival timestamp.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Queued<T> {
+    pub item: T,
+    pub arrival_ms: f64,
+}
+
+/// Bounded FIFO admission queue for one edge server.
+#[derive(Clone, Debug)]
+pub struct AdmissionQueue<T> {
+    items: std::collections::VecDeque<Queued<T>>,
+    capacity: usize,
+    /// Requests rejected because the queue was full.
+    pub rejected: u64,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Paper testbed: queue length 4.
+    pub fn new(capacity: usize) -> AdmissionQueue<T> {
+        assert!(capacity > 0);
+        AdmissionQueue {
+            items: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            rejected: 0,
+        }
+    }
+
+    /// Try to admit; returns false (and counts a rejection) when full.
+    pub fn push(&mut self, item: T, now_ms: f64) -> bool {
+        if self.items.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.items.push_back(Queued { item, arrival_ms: now_ms });
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.capacity
+    }
+
+    /// Drain everything for a decision frame, returning (item, T^q) pairs
+    /// where T^q = now - arrival.
+    pub fn drain(&mut self, now_ms: f64) -> Vec<(T, f64)> {
+        self.items
+            .drain(..)
+            .map(|q| (q.item, (now_ms - q.arrival_ms).max(0.0)))
+            .collect()
+    }
+}
+
+/// The decision clock: a frame ends every `frame_ms` (paper testbed:
+/// 3000 ms) or when any queue fills, whichever comes first.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameClock {
+    pub frame_ms: f64,
+    next_deadline_ms: f64,
+}
+
+impl FrameClock {
+    pub fn new(frame_ms: f64) -> FrameClock {
+        assert!(frame_ms > 0.0);
+        FrameClock { frame_ms, next_deadline_ms: frame_ms }
+    }
+
+    /// Should a decision run at `now`, given whether some queue is full?
+    pub fn should_fire(&self, now_ms: f64, any_queue_full: bool) -> bool {
+        any_queue_full || now_ms >= self.next_deadline_ms
+    }
+
+    /// Mark a decision as run at `now`; schedules the next deadline.
+    pub fn fired(&mut self, now_ms: f64) {
+        self.next_deadline_ms = now_ms + self.frame_ms;
+    }
+
+    pub fn next_deadline_ms(&self) -> f64 {
+        self.next_deadline_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_tq() {
+        let mut q = AdmissionQueue::new(4);
+        assert!(q.push("a", 0.0));
+        assert!(q.push("b", 100.0));
+        let drained = q.drain(250.0);
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0], ("a", 250.0));
+        assert_eq!(drained[1], ("b", 150.0));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.push(1, 0.0));
+        assert!(q.push(2, 0.0));
+        assert!(q.is_full());
+        assert!(!q.push(3, 0.0));
+        assert_eq!(q.rejected, 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_on_empty_is_empty() {
+        let mut q: AdmissionQueue<u8> = AdmissionQueue::new(1);
+        assert!(q.drain(10.0).is_empty());
+    }
+
+    #[test]
+    fn tq_never_negative() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(1, 100.0);
+        let drained = q.drain(50.0); // clock skew guard
+        assert_eq!(drained[0].1, 0.0);
+    }
+
+    #[test]
+    fn frame_clock_fires_on_deadline_or_full() {
+        let mut c = FrameClock::new(3000.0);
+        assert!(!c.should_fire(1000.0, false));
+        assert!(c.should_fire(1000.0, true));
+        assert!(c.should_fire(3000.0, false));
+        c.fired(3000.0);
+        assert_eq!(c.next_deadline_ms(), 6000.0);
+        assert!(!c.should_fire(4000.0, false));
+    }
+}

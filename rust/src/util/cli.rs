@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser substrate (the offline registry has no clap).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` forms —
+//! enough for the `edgeus` launcher, examples and bench binaries.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+const FLAG_SET: &str = "true";
+
+impl Args {
+    /// Parse from an explicit token list (first token = first *argument*,
+    /// not the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I, with_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        if with_subcommand {
+            if let Some(tok) = it.peek() {
+                if !tok.starts_with('-') {
+                    args.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list value.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|s| s.split(',').filter(|p| !p.is_empty()).map(|p| p.to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        // Note: a bare `--flag value` pair always binds (greedy); flags
+        // intended as booleans must come last or use `--flag=true`.
+        let a = Args::parse(toks("figure --id fig1a --runs=100 out.json --verbose"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.get("id"), Some("fig1a"));
+        assert_eq!(a.get_usize("runs", 0), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["out.json"]);
+    }
+
+    #[test]
+    fn no_subcommand_mode() {
+        let a = Args::parse(toks("pos1 --k v"), false);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.positionals, vec!["pos1"]);
+        assert_eq!(a.get("k"), Some("v"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(toks("--a --b value"), true);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("value"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(toks(""), true);
+        assert_eq!(a.get_f64("x", 1.5), 1.5);
+        assert_eq!(a.get_or("y", "d"), "d");
+        assert!(!a.flag("z"));
+    }
+
+    #[test]
+    fn list_values() {
+        let a = Args::parse(toks("--tiers tiny,small,base"), true);
+        assert_eq!(
+            a.get_list("tiers").unwrap(),
+            vec!["tiny".to_string(), "small".to_string(), "base".to_string()]
+        );
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--x -5` : "-5" does not start with "--", so it is a value.
+        let a = Args::parse(toks("--x -5"), true);
+        assert_eq!(a.get_f64("x", 0.0), -5.0);
+    }
+}

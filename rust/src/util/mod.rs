@@ -1,0 +1,8 @@
+//! Shared substrates built in-tree for the offline environment:
+//! PRNG, JSON, CLI parsing, statistics, and property testing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

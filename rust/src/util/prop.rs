@@ -1,0 +1,158 @@
+//! Property-testing substrate (the offline registry has no proptest).
+//!
+//! `check` runs a property over `cases` seeded inputs; on failure it
+//! reruns with progressively simpler size hints to report the smallest
+//! failing case it can find, then panics with the reproducing seed.
+//!
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let n = g.usize_in(1..50);
+//!     let xs = g.vec_f64(n, 0.0..100.0);
+//!     assert!(xs.iter().all(|x| *x >= 0.0));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+use std::ops::Range;
+
+/// Random input source handed to properties; wraps [`Rng`] with
+/// size-bounded convenience generators.
+pub struct Gen {
+    rng: Rng,
+    /// 0.0..=1.0 multiplier applied to collection/size hints while
+    /// searching for a smaller failing case.
+    size_scale: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, size_scale: f64) -> Gen {
+        Gen { rng: Rng::new(seed), size_scale, seed }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.uniform(r.start, r.end)
+    }
+
+    /// Size-scaled integer range: shrink passes sample nearer `r.start`.
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        let span = r.end.saturating_sub(r.start).max(1);
+        let scaled = ((span as f64 * self.size_scale).ceil() as usize).clamp(1, span);
+        r.start + self.rng.index(scaled)
+    }
+
+    pub fn u64_in(&mut self, r: Range<u64>) -> u64 {
+        r.start + self.rng.below((r.end - r.start).max(1))
+    }
+
+    pub fn vec_f64(&mut self, n: usize, r: Range<f64>) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(r.clone())).collect()
+    }
+
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        self.rng.normal(mean, std)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "pick from empty slice");
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `property` on `cases` random inputs. Panics (with seed) on failure.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(cases: u64, property: F) {
+    // Base seed is overridable for reproducing CI failures.
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xED6E05u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        if run_case(&property, seed, 1.0).is_err() {
+            // Shrink-lite: retry the same seed with smaller size hints to
+            // report a simpler failure if one exists.
+            for scale in [0.1, 0.25, 0.5] {
+                if let Err(msg) = run_case(&property, seed, scale) {
+                    panic!(
+                        "property failed (seed={seed}, size_scale={scale}): {msg}\n\
+                         reproduce with PROP_SEED={base} (case {case})"
+                    );
+                }
+            }
+            let msg = run_case(&property, seed, 1.0).unwrap_err();
+            panic!(
+                "property failed (seed={seed}): {msg}\n\
+                 reproduce with PROP_SEED={base} (case {case})"
+            );
+        }
+    }
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    property: &F,
+    seed: u64,
+    scale: f64,
+) -> Result<(), String> {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::new(seed, scale);
+        property(&mut g);
+    });
+    match result {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            Err(msg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |g| {
+            let n = g.usize_in(1..20);
+            let xs = g.vec_f64(n, 0.0..1.0);
+            assert_eq!(xs.len(), n);
+            assert!(xs.iter().all(|x| (0.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, |g| {
+            let x = g.f64_in(0.0..10.0);
+            assert!(x < 9.0, "x too large: {x}");
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        check(100, |g| {
+            let v = g.usize_in(3..10);
+            assert!((3..10).contains(&v));
+        });
+    }
+
+    #[test]
+    fn deterministic_given_env_seed() {
+        let mut a = Gen::new(99, 1.0);
+        let mut b = Gen::new(99, 1.0);
+        assert_eq!(a.u64_in(0..1000), b.u64_in(0..1000));
+    }
+}

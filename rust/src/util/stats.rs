@@ -1,0 +1,265 @@
+//! Statistics substrate: online accumulators, percentiles, confidence
+//! intervals, and fixed-bucket histograms — used by the Monte-Carlo
+//! harness, the metrics layer, and the in-tree bench harness.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn merge(&mut self, other: &Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the ~95% CI on the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::NAN;
+        }
+        1.96 * self.std() / (self.n as f64).sqrt()
+    }
+}
+
+/// Percentile of a sample (linear interpolation, `q` in [0,1]).
+/// Sorts a copy; fine for the sample sizes we report on.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Fixed-bucket latency histogram (log-ish bounds chosen by caller).
+/// `Default` gives an exponential 1 ms..32 s ladder.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    acc: Accumulator,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::exponential(1.0, 2.0, 16)
+    }
+}
+
+impl Histogram {
+    /// `bounds` are upper edges; an extra overflow bucket is appended.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; n], acc: Accumulator::new() }
+    }
+
+    /// Convenience: exponential bounds `start, start*factor, ...` (n of them).
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Self {
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = start;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram::new(bounds)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|b| *b < x);
+        self.counts[idx] += 1;
+        self.acc.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.acc.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.acc.mean()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.acc.max()
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut cum = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.acc.max() };
+            }
+        }
+        self.acc.max()
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_basic() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn accumulator_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Accumulator::new();
+        xs.iter().for_each(|x| whole.push(*x));
+        let mut a = Accumulator::new();
+        let mut b = Accumulator::new();
+        xs[..40].iter().for_each(|x| a.push(*x));
+        xs[40..].iter().for_each(|x| b.push(*x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_accumulator_nan_mean() {
+        assert!(Accumulator::new().mean().is_nan());
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let mut small = Accumulator::new();
+        let mut big = Accumulator::new();
+        for i in 0..10 {
+            small.push(i as f64 % 3.0);
+        }
+        for i in 0..10_000 {
+            big.push(i as f64 % 3.0);
+        }
+        assert!(big.ci95() < small.ci95());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_empty_nan() {
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let mut h = Histogram::new(vec![10.0, 100.0, 1000.0]);
+        for x in [1.0, 5.0, 50.0, 500.0, 5000.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 5);
+        let counts: Vec<u64> = h.buckets().map(|(_, c)| c).collect();
+        assert_eq!(counts, vec![2, 1, 1, 1]);
+        assert!(h.quantile(0.2) <= 10.0);
+        assert_eq!(h.quantile(1.0), 5000.0);
+    }
+
+    #[test]
+    fn histogram_exponential_bounds() {
+        let h = Histogram::exponential(1.0, 10.0, 3);
+        let bounds: Vec<f64> = h.buckets().map(|(b, _)| b).collect();
+        assert_eq!(bounds[..3], [1.0, 10.0, 100.0]);
+        assert!(bounds[3].is_infinite());
+    }
+}

@@ -1,0 +1,190 @@
+//! Workload generation: the request populations of §IV.
+//!
+//! Numerical defaults follow the paper: requested accuracy
+//! `A_i ~ N(45%, 10%)` truncated to [0, 100]; requested delay
+//! `C_i ~ N(1000 ms, 4000 ms)` truncated to [0, Max_cs]; queuing delay
+//! `T^q ~ U(0, 50) ms`; services uniform over K; covering edge uniform
+//! over the edge servers; equal weights `w_a = w_c = 1`.
+
+pub mod trace;
+
+use crate::model::request::Request;
+use crate::model::server::ServerId;
+use crate::model::ProblemInstance;
+use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
+use crate::model::topology::{Topology, TopologyParams};
+use crate::util::rng::Rng;
+
+/// Distribution parameters for one request population.
+#[derive(Clone, Debug)]
+pub struct WorkloadParams {
+    pub num_requests: usize,
+    /// A_i mean / std (percent).
+    pub accuracy_mean_pct: f64,
+    pub accuracy_std_pct: f64,
+    /// C_i mean / std (ms).
+    pub deadline_mean_ms: f64,
+    pub deadline_std_ms: f64,
+    /// T^q upper bound (ms), uniform from 0.
+    pub queue_delay_max_ms: f64,
+    /// Satisfaction weights (paper: both 1).
+    pub w_accuracy: f64,
+    pub w_completion: f64,
+    /// Payload size band (bytes) for the serving path.
+    pub payload_lo_bytes: u64,
+    pub payload_hi_bytes: u64,
+    /// Hard cap used to truncate C_i (the system's Max_cs).
+    pub max_completion_ms: f64,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        WorkloadParams {
+            num_requests: 100,
+            accuracy_mean_pct: 45.0,
+            accuracy_std_pct: 10.0,
+            deadline_mean_ms: 1000.0,
+            deadline_std_ms: 4000.0,
+            queue_delay_max_ms: 50.0,
+            w_accuracy: 1.0,
+            w_completion: 1.0,
+            payload_lo_bytes: 8_000,
+            payload_hi_bytes: 20_000,
+            max_completion_ms: 12_000.0,
+        }
+    }
+}
+
+/// Draw one request population against a topology/catalog.
+pub fn generate_requests(
+    params: &WorkloadParams,
+    num_services: usize,
+    edge_ids: &[ServerId],
+    rng: &mut Rng,
+) -> Vec<Request> {
+    assert!(!edge_ids.is_empty(), "need at least one edge server");
+    (0..params.num_requests)
+        .map(|i| {
+            let covering = *rng.choose(edge_ids).unwrap();
+            let a = rng.normal_clamped(params.accuracy_mean_pct, params.accuracy_std_pct, 0.0, 100.0);
+            let c = rng.normal_clamped(
+                params.deadline_mean_ms,
+                params.deadline_std_ms,
+                0.0,
+                params.max_completion_ms,
+            );
+            Request::new(i, rng.index(num_services), covering.0)
+                .with_qos(a, c)
+                .with_weights(params.w_accuracy, params.w_completion)
+                .with_queue_delay(rng.uniform(0.0, params.queue_delay_max_ms))
+                .with_payload(rng.u64_range(params.payload_lo_bytes, params.payload_hi_bytes))
+        })
+        .collect()
+}
+
+/// Everything needed to instantiate one full numerical scenario.
+#[derive(Clone, Debug, Default)]
+pub struct ScenarioParams {
+    pub topology: TopologyParams,
+    pub catalog: CatalogParams,
+    pub workload: WorkloadParams,
+}
+
+/// Build a complete `ProblemInstance` for one Monte-Carlo draw.
+pub fn build_instance(params: &ScenarioParams, rng: &mut Rng) -> ProblemInstance {
+    let topology = Topology::paper_default(&params.topology, rng);
+    let catalog = ServiceCatalog::synthetic(&params.catalog, rng);
+    let classes: Vec<_> = topology.servers.iter().map(|s| s.class).collect();
+    let placement = Placement::random(&catalog, &classes, rng);
+    let edge_ids = topology.edge_ids();
+    let requests = generate_requests(&params.workload, catalog.num_services, &edge_ids, rng);
+    ProblemInstance::new(topology, catalog, placement, requests)
+        .with_normalization(100.0, params.workload.max_completion_ms)
+}
+
+impl Rng {
+    /// Uniform u64 in `[lo, hi]`.
+    pub fn u64_range(&mut self, lo: u64, hi: u64) -> u64 {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.below(hi - lo + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count_with_valid_fields() {
+        let mut rng = Rng::new(1);
+        let edges = vec![ServerId(0), ServerId(1), ServerId(2)];
+        let reqs = generate_requests(&WorkloadParams::default(), 10, &edges, &mut rng);
+        assert_eq!(reqs.len(), 100);
+        for r in &reqs {
+            assert!((0.0..=100.0).contains(&r.min_accuracy_pct));
+            assert!((0.0..=12_000.0).contains(&r.max_completion_ms));
+            assert!((0.0..=50.0).contains(&r.queue_delay_ms));
+            assert!(r.service.0 < 10);
+            assert!(edges.contains(&r.covering));
+            assert!((8_000..=20_000).contains(&r.payload_bytes));
+        }
+    }
+
+    #[test]
+    fn accuracy_distribution_centered() {
+        let mut rng = Rng::new(2);
+        let edges = vec![ServerId(0)];
+        let params = WorkloadParams { num_requests: 20_000, ..Default::default() };
+        let reqs = generate_requests(&params, 5, &edges, &mut rng);
+        let mean: f64 =
+            reqs.iter().map(|r| r.min_accuracy_pct).sum::<f64>() / reqs.len() as f64;
+        assert!((mean - 45.0).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn deadline_truncation_shifts_mean_up() {
+        // N(1000, 4000) truncated to [0, 12000]: mass below 0 folds to 0,
+        // so the realized mean is > 1000 but far below the cap.
+        let mut rng = Rng::new(3);
+        let edges = vec![ServerId(0)];
+        let params = WorkloadParams { num_requests: 20_000, ..Default::default() };
+        let reqs = generate_requests(&params, 5, &edges, &mut rng);
+        let mean: f64 =
+            reqs.iter().map(|r| r.max_completion_ms).sum::<f64>() / reqs.len() as f64;
+        assert!(mean > 1500.0 && mean < 4000.0, "mean={mean}");
+    }
+
+    #[test]
+    fn build_instance_is_valid_and_paper_sized() {
+        let mut rng = Rng::new(4);
+        let inst = build_instance(&ScenarioParams::default(), &mut rng);
+        inst.validate().unwrap();
+        assert_eq!(inst.num_servers(), 10);
+        assert_eq!(inst.num_requests(), 100);
+        assert_eq!(inst.catalog.num_services, 100);
+        assert_eq!(inst.catalog.num_tiers, 10);
+        assert_eq!(inst.max_completion_ms, 12_000.0);
+    }
+
+    #[test]
+    fn build_instance_deterministic_per_seed() {
+        let a = build_instance(&ScenarioParams::default(), &mut Rng::new(9));
+        let b = build_instance(&ScenarioParams::default(), &mut Rng::new(9));
+        for (x, y) in a.requests.iter().zip(b.requests.iter()) {
+            assert_eq!(x.min_accuracy_pct, y.min_accuracy_pct);
+            assert_eq!(x.covering, y.covering);
+        }
+    }
+
+    #[test]
+    fn u64_range_bounds() {
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            let v = rng.u64_range(10, 12);
+            assert!((10..=12).contains(&v));
+        }
+        assert_eq!(rng.u64_range(5, 5), 5);
+    }
+}

@@ -1,0 +1,198 @@
+//! Request traces: record / replay workloads as JSON so experiments are
+//! exactly repeatable across machines and so external traces (e.g. from
+//! a production edge deployment) can drive the simulators.
+
+use crate::model::request::Request;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::WorkloadParams;
+use anyhow::{Context, Result};
+
+/// One timestamped request record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub arrival_ms: f64,
+    pub service: usize,
+    pub covering_edge: usize,
+    pub min_accuracy_pct: f64,
+    pub max_completion_ms: f64,
+    pub payload_bytes: u64,
+    pub priority: u8,
+}
+
+/// An ordered workload trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    /// Synthesize a Poisson trace from the §IV distributions.
+    pub fn synthesize(
+        params: &WorkloadParams,
+        num_services: usize,
+        num_edges: usize,
+        horizon_ms: f64,
+        rate_per_s: f64,
+        rng: &mut Rng,
+    ) -> Trace {
+        assert!(num_edges > 0 && num_services > 0 && rate_per_s > 0.0);
+        let gap = 1000.0 / rate_per_s;
+        let mut t = rng.uniform(0.0, gap);
+        let mut records = Vec::new();
+        while t <= horizon_ms {
+            records.push(TraceRecord {
+                arrival_ms: t,
+                service: rng.index(num_services),
+                covering_edge: rng.index(num_edges),
+                min_accuracy_pct: rng.normal_clamped(
+                    params.accuracy_mean_pct,
+                    params.accuracy_std_pct,
+                    0.0,
+                    100.0,
+                ),
+                max_completion_ms: rng.normal_clamped(
+                    params.deadline_mean_ms,
+                    params.deadline_std_ms,
+                    0.0,
+                    params.max_completion_ms,
+                ),
+                payload_bytes: rng.u64_range(params.payload_lo_bytes, params.payload_hi_bytes),
+                priority: 0,
+            });
+            t -= gap * (1.0 - rng.f64()).ln();
+        }
+        Trace { records }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Convert the records arriving in `[from_ms, to_ms)` into scheduler
+    /// requests, with T^q measured against the decision time `to_ms`.
+    pub fn window_requests(&self, from_ms: f64, to_ms: f64, edge_server_ids: &[usize]) -> Vec<Request> {
+        self.records
+            .iter()
+            .filter(|r| r.arrival_ms >= from_ms && r.arrival_ms < to_ms)
+            .enumerate()
+            .map(|(i, r)| {
+                Request::new(i, r.service, edge_server_ids[r.covering_edge % edge_server_ids.len()])
+                    .with_qos(r.min_accuracy_pct, r.max_completion_ms)
+                    .with_queue_delay((to_ms - r.arrival_ms).max(0.0))
+                    .with_payload(r.payload_bytes)
+                    .with_priority(r.priority)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "records",
+            Json::arr(self.records.iter().map(|r| {
+                Json::obj(vec![
+                    ("arrival_ms", Json::num(r.arrival_ms)),
+                    ("service", Json::num(r.service as f64)),
+                    ("covering_edge", Json::num(r.covering_edge as f64)),
+                    ("min_accuracy_pct", Json::num(r.min_accuracy_pct)),
+                    ("max_completion_ms", Json::num(r.max_completion_ms)),
+                    ("payload_bytes", Json::num(r.payload_bytes as f64)),
+                    ("priority", Json::num(r.priority as f64)),
+                ])
+            })),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let mut records = Vec::new();
+        for r in j.get("records").as_arr().context("trace: records[]")? {
+            records.push(TraceRecord {
+                arrival_ms: r.get("arrival_ms").as_f64().context("arrival_ms")?,
+                service: r.get("service").as_usize().context("service")?,
+                covering_edge: r.get("covering_edge").as_usize().context("covering_edge")?,
+                min_accuracy_pct: r.get("min_accuracy_pct").as_f64().context("min_accuracy")?,
+                max_completion_ms: r.get("max_completion_ms").as_f64().context("max_completion")?,
+                payload_bytes: r.get("payload_bytes").as_usize().context("payload")? as u64,
+                priority: r.get("priority").as_usize().unwrap_or(0) as u8,
+            });
+        }
+        Ok(Trace { records })
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty()).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Trace> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Trace::from_json(&Json::parse(&text).context("parsing trace")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut rng = Rng::new(3);
+        Trace::synthesize(&WorkloadParams::default(), 10, 4, 30_000.0, 2.0, &mut rng)
+    }
+
+    #[test]
+    fn synthesize_is_ordered_and_plausible() {
+        let t = sample();
+        assert!(t.len() > 30, "expect ~60 records, got {}", t.len());
+        for w in t.records.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+        for r in &t.records {
+            assert!(r.service < 10 && r.covering_edge < 4);
+            assert!((0.0..=100.0).contains(&r.min_accuracy_pct));
+        }
+    }
+
+    #[test]
+    fn json_round_trip_exact() {
+        let t = sample();
+        let t2 = Trace::from_json(&Json::parse(&t.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(t.len(), t2.len());
+        assert_eq!(t.records[5].service, t2.records[5].service);
+        assert!((t.records[5].arrival_ms - t2.records[5].arrival_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("edgeus_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.json").to_string_lossy().to_string();
+        let t = sample();
+        t.save(&path).unwrap();
+        let t2 = Trace::load(&path).unwrap();
+        assert_eq!(t.len(), t2.len());
+    }
+
+    #[test]
+    fn window_requests_computes_tq() {
+        let t = sample();
+        let reqs = t.window_requests(0.0, 3000.0, &[0, 1, 2, 3]);
+        assert!(!reqs.is_empty());
+        for r in &reqs {
+            assert!(r.queue_delay_ms >= 0.0 && r.queue_delay_ms <= 3000.0);
+        }
+        let all: usize = t
+            .records
+            .iter()
+            .filter(|r| r.arrival_ms < 3000.0)
+            .count();
+        assert_eq!(reqs.len(), all);
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(Trace::load("/nonexistent/trace.json").is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Smoke tests for the figure-regeneration harness: every panel runs at
+//! reduced scale and reproduces the paper's qualitative trends.
+
+use edgeus::figures::{
+    run_numerical_sweep, run_optimal_gap, NumericalConfig, NumericalFigure,
+};
+
+fn gus_series(series: &edgeus::metrics::Series) -> &Vec<f64> {
+    &series.policies.iter().find(|(n, _, _)| n == "gus").unwrap().1
+}
+
+#[test]
+fn fig1a_more_delay_budget_helps() {
+    let cfg = NumericalConfig::quick();
+    let s = run_numerical_sweep(NumericalFigure::Fig1a, &cfg, &[500.0, 3000.0, 8000.0]);
+    let gus = gus_series(&s);
+    assert!(gus[2] > gus[0], "{gus:?}");
+}
+
+#[test]
+fn fig1b_higher_accuracy_demand_hurts() {
+    let cfg = NumericalConfig::quick();
+    let s = run_numerical_sweep(NumericalFigure::Fig1b, &cfg, &[30.0, 60.0, 85.0]);
+    let gus = gus_series(&s);
+    assert!(gus[2] < gus[0], "{gus:?}");
+}
+
+#[test]
+fn fig1c_load_hurts() {
+    let cfg = NumericalConfig::quick();
+    let s = run_numerical_sweep(NumericalFigure::Fig1c, &cfg, &[20.0, 120.0]);
+    let gus = gus_series(&s);
+    assert!(gus[1] < gus[0], "{gus:?}");
+}
+
+#[test]
+fn fig1d_queue_delay_hurts() {
+    let cfg = NumericalConfig::quick();
+    let s = run_numerical_sweep(NumericalFigure::Fig1d, &cfg, &[0.0, 2000.0]);
+    let gus = gus_series(&s);
+    assert!(gus[1] < gus[0], "{gus:?}");
+}
+
+#[test]
+fn gus_dominates_baselines_across_panels() {
+    let cfg = NumericalConfig::quick();
+    for fig in [NumericalFigure::Fig1a, NumericalFigure::Fig1c] {
+        let sweep = [fig.default_sweep()[0], *fig.default_sweep().last().unwrap()];
+        let s = run_numerical_sweep(fig, &cfg, &sweep);
+        let gus = gus_series(&s).clone();
+        for baseline in ["random", "offload-all", "local-all"] {
+            let b = &s.policies.iter().find(|(n, _, _)| n == baseline).unwrap().1;
+            for (i, (g, b)) in gus.iter().zip(b.iter()).enumerate() {
+                assert!(
+                    g + 1e-9 >= *b,
+                    "{}: GUS {g:.1} < {baseline} {b:.1} at point {i}",
+                    fig.id()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn optimal_gap_matches_paper_band() {
+    let r = run_optimal_gap(&[4, 6], 6, 17);
+    assert!(r.exact_fraction == 1.0, "small sizes must solve exactly");
+    assert!(
+        r.mean_ratio >= 0.85 && r.mean_ratio <= 1.0,
+        "paper reports ~0.90, got {:.3}",
+        r.mean_ratio
+    );
+}
+
+#[test]
+fn series_emitters_work_for_real_output() {
+    let cfg = NumericalConfig::quick();
+    let s = run_numerical_sweep(NumericalFigure::Fig1a, &cfg, &[1000.0, 4000.0]);
+    let md = s.to_markdown();
+    assert!(md.contains("gus"));
+    let csv = s.to_csv();
+    assert_eq!(csv.lines().count(), 3);
+    let json = s.to_json().pretty();
+    assert!(edgeus::util::json::Json::parse(&json).is_ok());
+}

@@ -1,0 +1,211 @@
+//! Integration tests across model → coordinator → sim → config, plus the
+//! PJRT runtime against the real artifacts (skipped with a notice when
+//! `artifacts/` has not been built).
+
+use edgeus::config;
+use edgeus::coordinator::us::{validate_schedule, ConstraintMode};
+use edgeus::prelude::*;
+use edgeus::runtime::InferenceEngine;
+use edgeus::util::json::Json;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("EDGEUS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    std::path::Path::new(&format!("{dir}/manifest.json")).exists().then_some(dir)
+}
+
+// ---------------------------------------------------------------- runtime
+
+#[test]
+fn runtime_loads_and_infers_every_tier() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load_filtered(&dir, |a| a.batch == 1).unwrap();
+    for tier in engine.manifest.tiers() {
+        let images = vec![0.25f32; 32 * 32 * 3];
+        let r = engine.infer_tier(&tier, 1, &images).unwrap();
+        assert_eq!(r.logits.len(), 10, "{tier}: wrong logit count");
+        assert!(r.logits.iter().all(|x| x.is_finite()), "{tier}: non-finite logits");
+        assert!(r.execute_ms > 0.0);
+        assert!(r.predictions()[0] < 10);
+    }
+}
+
+#[test]
+fn runtime_inference_is_deterministic() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load_filtered(&dir, |a| a.tier == "tiny" && a.batch == 1)
+        .unwrap();
+    let images: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 255) as f32 / 255.0).collect();
+    let a = engine.infer_tier("tiny", 1, &images).unwrap();
+    let b = engine.infer_tier("tiny", 1, &images).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+#[test]
+fn runtime_batch_matches_single() {
+    // Row i of a batch-4 execution equals 4 independent batch-1 runs.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load_filtered(&dir, |a| a.tier == "small").unwrap();
+    let mut rng = Rng::new(5);
+    let one = 32 * 32 * 3;
+    let images: Vec<f32> = (0..4 * one).map(|_| rng.f64() as f32).collect();
+    let batched = engine.infer_tier("small", 4, &images).unwrap();
+    for i in 0..4 {
+        let single = engine
+            .infer_tier("small", 1, &images[i * one..(i + 1) * one])
+            .unwrap();
+        for (a, b) in batched.logits[i * 10..(i + 1) * 10].iter().zip(single.logits.iter()) {
+            assert!((a - b).abs() < 1e-4, "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_input_shape() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let engine = InferenceEngine::load_filtered(&dir, |a| a.tier == "tiny" && a.batch == 1)
+        .unwrap();
+    assert!(engine.infer_tier("tiny", 1, &[0.0; 10]).is_err());
+    assert!(engine.infer_tier("nope", 1, &[0.0; 3072]).is_err());
+}
+
+#[test]
+fn manifest_profiles_are_monotone_ladder() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let manifest = edgeus::runtime::Manifest::load(&dir).unwrap();
+    let tiers = manifest.tiers();
+    assert!(tiers.len() >= 3, "need a real tier ladder, got {tiers:?}");
+    let accs: Vec<f64> = tiers
+        .iter()
+        .map(|t| manifest.find(t, 1).unwrap().profile_accuracy_pct)
+        .collect();
+    let flops: Vec<u64> = tiers
+        .iter()
+        .map(|t| manifest.find(t, 1).unwrap().flops_per_image)
+        .collect();
+    for i in 1..accs.len() {
+        assert!(accs[i] > accs[i - 1], "accuracy ladder must ascend");
+        assert!(flops[i] > flops[i - 1], "flops ladder must ascend");
+    }
+}
+
+// ------------------------------------------------------ coordinator + sim
+
+#[test]
+fn full_monte_carlo_pipeline_produces_sane_ordering() {
+    let mc = MonteCarlo {
+        runs: 32,
+        base_seed: 11,
+        threads: 4,
+        ..Default::default()
+    };
+    let stats = mc.run();
+    let by = |n: &str| stats.iter().find(|s| s.name == n).unwrap();
+    let gus = by("gus");
+    // GUS dominates the naive baselines on the paper-default scenario.
+    for baseline in ["random", "offload-all", "local-all"] {
+        assert!(
+            gus.satisfied_pct.mean() >= by(baseline).satisfied_pct.mean(),
+            "GUS {} < {} {}",
+            gus.satisfied_pct.mean(),
+            baseline,
+            by(baseline).satisfied_pct.mean()
+        );
+    }
+    // The headline claim: ≥ 1.5x the mean of the naive baselines.
+    let naive_mean = (by("random").satisfied_pct.mean()
+        + by("offload-all").satisfied_pct.mean()
+        + by("local-all").satisfied_pct.mean())
+        / 3.0;
+    assert!(
+        gus.satisfied_pct.mean() >= 1.5 * naive_mean,
+        "paper claims ≥50% improvement: GUS {:.1} vs naive mean {:.1}",
+        gus.satisfied_pct.mean(),
+        naive_mean
+    );
+}
+
+#[test]
+fn every_policy_returns_constraint_valid_schedules() {
+    let mut rng = Rng::new(21);
+    let inst = build_instance(&ScenarioParams::default(), &mut rng);
+    for sched in all_schedulers() {
+        let schedule = sched.schedule(&inst, &mut rng.fork(7));
+        let mode = match sched.name() {
+            "happy-computation" => ConstraintMode::HAPPY_COMPUTATION,
+            "happy-communication" => ConstraintMode::HAPPY_COMMUNICATION,
+            _ => ConstraintMode::STRICT,
+        };
+        validate_schedule(&inst, &schedule, mode)
+            .unwrap_or_else(|e| panic!("{}: {e}", sched.name()));
+    }
+}
+
+#[test]
+fn ilp_dominates_gus_on_paper_shaped_small_instances() {
+    for seed in 0..5 {
+        let scenario = ScenarioParams {
+            workload: WorkloadParams { num_requests: 8, ..Default::default() },
+            ..Default::default()
+        };
+        let mut rng = Rng::new(seed);
+        let inst = build_instance(&scenario, &mut rng);
+        let opt = BranchAndBound::default().solve(&inst);
+        assert!(opt.exact, "seed {seed} must solve exactly");
+        let gus = Gus::default().schedule(&inst, &mut rng);
+        assert!(opt.schedule.objective() >= gus.objective() - 1e-9);
+        validate_schedule(&inst, &opt.schedule, ConstraintMode::STRICT).unwrap();
+    }
+}
+
+// ----------------------------------------------------------------- config
+
+#[test]
+fn config_file_drives_the_simulation() {
+    let dir = std::env::temp_dir().join("edgeus_int_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("scenario.json");
+    std::fs::write(
+        &path,
+        r#"{
+          "topology": {"num_edge": 4, "num_cloud": 1},
+          "catalog": {"num_services": 8, "num_tiers": 3},
+          "workload": {"num_requests": 25, "accuracy_mean_pct": 40},
+          "runs": 6, "seed": 123, "threads": 2
+        }"#,
+    )
+    .unwrap();
+    let mc = config::load_montecarlo(path.to_str().unwrap()).unwrap();
+    assert_eq!(mc.runs, 6);
+    let stats = mc.run();
+    assert_eq!(stats.len(), 6);
+    assert_eq!(stats[0].satisfied_pct.count(), 6);
+}
+
+#[test]
+fn scenario_json_round_trip_preserves_behaviour() {
+    let scenario = ScenarioParams::default();
+    let json = config::scenario_to_json(&scenario).pretty();
+    let parsed = config::scenario_from_json(&Json::parse(&json).unwrap());
+    let a = build_instance(&scenario, &mut Rng::new(5));
+    let b = build_instance(&parsed, &mut Rng::new(5));
+    assert_eq!(a.num_requests(), b.num_requests());
+    for (x, y) in a.requests.iter().zip(b.requests.iter()) {
+        assert_eq!(x.min_accuracy_pct, y.min_accuracy_pct);
+        assert_eq!(x.max_completion_ms, y.max_completion_ms);
+    }
+}

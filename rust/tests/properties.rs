@@ -1,0 +1,221 @@
+//! Property-based tests over the coordinator invariants, using the
+//! in-tree `prop` harness (see `util::prop`) on randomized instances.
+
+use edgeus::coordinator::us::{
+    qos_satisfied, user_satisfaction, validate_schedule, ConstraintMode,
+};
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::prelude::*;
+use edgeus::util::prop::{self, Gen};
+use edgeus::workload::WorkloadParams;
+
+/// Draw a random-but-valid scenario from the generator.
+fn random_instance(g: &mut Gen) -> ProblemInstance {
+    let scenario = ScenarioParams {
+        topology: TopologyParams {
+            num_edge: g.usize_in(1..8),
+            num_cloud: g.usize_in(1..3),
+            ..Default::default()
+        },
+        catalog: CatalogParams {
+            num_services: g.usize_in(1..12),
+            num_tiers: g.usize_in(1..6),
+            ..Default::default()
+        },
+        workload: WorkloadParams {
+            num_requests: g.usize_in(1..60),
+            accuracy_mean_pct: g.f64_in(20.0..80.0),
+            deadline_mean_ms: g.f64_in(500.0..8000.0),
+            queue_delay_max_ms: g.f64_in(0.0..500.0),
+            ..Default::default()
+        },
+    };
+    let seed = g.u64_in(0..u64::MAX / 2);
+    let inst = build_instance(&scenario, &mut Rng::new(seed));
+    inst.validate().expect("generated instance must be valid");
+    inst
+}
+
+#[test]
+fn prop_every_policy_respects_its_constraint_mode() {
+    prop::check(60, |g| {
+        let inst = random_instance(g);
+        let seed = g.u64_in(0..1 << 40);
+        for sched in all_schedulers() {
+            let schedule = sched.schedule(&inst, &mut Rng::new(seed));
+            let mode = match sched.name() {
+                "happy-computation" => ConstraintMode::HAPPY_COMPUTATION,
+                "happy-communication" => ConstraintMode::HAPPY_COMMUNICATION,
+                _ => ConstraintMode::STRICT,
+            };
+            validate_schedule(&inst, &schedule, mode)
+                .unwrap_or_else(|e| panic!("{}: {e}", sched.name()));
+        }
+    });
+}
+
+#[test]
+fn prop_at_most_one_assignment_per_request() {
+    // Constraint (2a) is structural in `Schedule`, but verify the slots
+    // map requests one-to-one and never duplicate a request id.
+    prop::check(40, |g| {
+        let inst = random_instance(g);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(1));
+        assert_eq!(s.slots.len(), inst.num_requests());
+        for (i, slot) in s.slots.iter().enumerate() {
+            if let Some(a) = slot {
+                assert_eq!(a.request.0, i);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gus_assignments_always_meet_qos_and_positive_us() {
+    prop::check(60, |g| {
+        let inst = random_instance(g);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(2));
+        for a in s.slots.iter().flatten() {
+            let req = &inst.requests[a.request.0];
+            assert!(qos_satisfied(req, &a.candidate));
+            assert!(a.us >= 0.0, "strict-mode US must be non-negative");
+            let expect = user_satisfaction(
+                req,
+                &a.candidate,
+                inst.max_accuracy_pct,
+                inst.max_completion_ms,
+            );
+            assert!((a.us - expect).abs() < 1e-9, "cached US must be exact");
+        }
+    });
+}
+
+#[test]
+fn prop_objective_is_mean_of_assigned_us() {
+    prop::check(40, |g| {
+        let inst = random_instance(g);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(3));
+        let manual: f64 = s.slots.iter().flatten().map(|a| a.us).sum::<f64>()
+            / inst.num_requests().max(1) as f64;
+        assert!((s.objective() - manual).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_decision_mix_sums_to_100() {
+    prop::check(40, |g| {
+        let inst = random_instance(g);
+        let seed = g.u64_in(0..1 << 40);
+        for sched in all_schedulers() {
+            let s = sched.schedule(&inst, &mut Rng::new(seed));
+            let mix = s.decision_mix_pct(&inst);
+            let sum: f64 = mix.iter().sum();
+            assert!((sum - 100.0).abs() < 1e-6, "{}: {mix:?}", sched.name());
+        }
+    });
+}
+
+#[test]
+fn prop_bb_optimum_dominates_every_heuristic() {
+    prop::check(25, |g| {
+        // Keep instances small enough for exact solves.
+        let scenario = ScenarioParams {
+            topology: TopologyParams {
+                num_edge: g.usize_in(1..4),
+                num_cloud: 1,
+                ..Default::default()
+            },
+            catalog: CatalogParams {
+                num_services: g.usize_in(1..4),
+                num_tiers: g.usize_in(1..4),
+                ..Default::default()
+            },
+            workload: WorkloadParams {
+                num_requests: g.usize_in(1..9),
+                ..Default::default()
+            },
+        };
+        let inst = build_instance(&scenario, &mut Rng::new(g.u64_in(0..1 << 40)));
+        let opt = BranchAndBound::default().solve(&inst);
+        assert!(opt.exact);
+        for sched in all_schedulers() {
+            if sched.name().starts_with("happy") {
+                continue; // relaxed constraints: not comparable
+            }
+            let s = sched.schedule(&inst, &mut Rng::new(4));
+            assert!(
+                opt.schedule.objective() >= s.objective() - 1e-9,
+                "{} beat the exact optimum",
+                sched.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_relaxing_constraints_never_reduces_served_count() {
+    prop::check(40, |g| {
+        let inst = random_instance(g);
+        let strict = Gus::default().schedule(&inst, &mut Rng::new(5));
+        let hc = Gus::with_mode(ConstraintMode::HAPPY_COMPUTATION)
+            .schedule(&inst, &mut Rng::new(5));
+        let hm = Gus::with_mode(ConstraintMode::HAPPY_COMMUNICATION)
+            .schedule(&inst, &mut Rng::new(5));
+        assert!(hc.served() >= strict.served());
+        assert!(hm.served() >= strict.served());
+    });
+}
+
+#[test]
+fn prop_capacity_never_oversubscribed_by_construction() {
+    prop::check(40, |g| {
+        let inst = random_instance(g);
+        let s = Gus::default().schedule(&inst, &mut Rng::new(6));
+        let mut gamma = vec![0.0; inst.num_servers()];
+        let mut eta = vec![0.0; inst.num_servers()];
+        for a in s.slots.iter().flatten() {
+            gamma[a.candidate.server.0] += a.candidate.comp_cost;
+            if a.candidate.offloaded {
+                eta[inst.requests[a.request.0].covering.0] += a.candidate.comm_cost;
+            }
+        }
+        for j in 0..inst.num_servers() {
+            assert!(gamma[j] <= inst.topology.servers[j].gamma + 1e-9);
+            assert!(eta[j] <= inst.topology.servers[j].eta + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_tightening_deadline_never_helps() {
+    // Monotonicity: shrinking every C_i can only reduce GUS satisfaction.
+    prop::check(30, |g| {
+        let mut inst = random_instance(g);
+        let loose = Gus::default().schedule(&inst, &mut Rng::new(7));
+        for r in &mut inst.requests {
+            r.max_completion_ms *= 0.5;
+        }
+        let tight = Gus::default().schedule(&inst, &mut Rng::new(7));
+        assert!(tight.satisfied(&inst) <= loose.served());
+    });
+}
+
+#[test]
+fn prop_schedule_deterministic_for_deterministic_policies() {
+    prop::check(25, |g| {
+        let inst = random_instance(g);
+        for name in ["gus", "offload-all", "local-all"] {
+            let p = scheduler_by_name(name).unwrap();
+            let a = p.schedule(&inst, &mut Rng::new(1));
+            let b = p.schedule(&inst, &mut Rng::new(2));
+            let key = |s: &Schedule| {
+                s.slots
+                    .iter()
+                    .map(|x| x.as_ref().map(|a| (a.candidate.server.0, a.candidate.tier.0)))
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(key(&a), key(&b), "{name} must ignore the RNG");
+        }
+    });
+}

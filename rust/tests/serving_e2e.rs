@@ -1,0 +1,87 @@
+//! End-to-end serving tests: the full L3 → PJRT → EdgeNet path, run live
+//! at high time compression. Skipped (with a notice) when `artifacts/`
+//! has not been built.
+
+use edgeus::serving::{ServingConfig, ServingSystem};
+
+fn config(requests: usize, scheduler: &str) -> Option<ServingConfig> {
+    let mut cfg = ServingConfig::default();
+    if !std::path::Path::new(&format!("{}/manifest.json", cfg.artifacts_dir)).exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return None;
+    }
+    cfg.scheduler = scheduler.into();
+    cfg.total_requests = requests;
+    cfg.window_ms = 30_000.0;
+    cfg.time_scale = 100.0;
+    cfg.seed = 13;
+    Some(cfg)
+}
+
+#[test]
+fn every_request_is_accounted_for() {
+    let Some(cfg) = config(40, "gus") else { return };
+    let m = ServingSystem::new(cfg).unwrap().run().unwrap();
+    assert_eq!(m.total_requests, 40);
+    assert_eq!(m.served + m.dropped, 40, "served {} + dropped {}", m.served, m.dropped);
+    assert_eq!(m.served, m.local + m.offload_cloud + m.offload_peer);
+    assert!(m.satisfied <= m.served);
+}
+
+#[test]
+fn gus_satisfies_most_users_at_light_load() {
+    let Some(cfg) = config(30, "gus") else { return };
+    let m = ServingSystem::new(cfg).unwrap().run().unwrap();
+    assert!(
+        m.satisfied_pct() >= 80.0,
+        "light load should be nearly all satisfied, got {:.1}%",
+        m.satisfied_pct()
+    );
+    // Real inference happened.
+    assert!(m.inference.count() > 0);
+    assert!(m.inference.mean() > 0.0);
+}
+
+#[test]
+fn local_all_never_offloads_and_offload_all_never_serves_locally() {
+    let Some(cfg) = config(30, "local-all") else { return };
+    let m = ServingSystem::new(cfg).unwrap().run().unwrap();
+    assert_eq!(m.offload_cloud + m.offload_peer, 0, "local-all must not offload");
+
+    let Some(cfg) = config(30, "offload-all") else { return };
+    let m = ServingSystem::new(cfg).unwrap().run().unwrap();
+    assert_eq!(m.local, 0, "offload-all must not serve locally");
+    assert_eq!(m.offload_peer, 0, "offload-all targets the cloud only");
+}
+
+#[test]
+fn unknown_scheduler_is_rejected() {
+    let Some(mut cfg) = config(5, "gus") else { return };
+    cfg.scheduler = "not-a-policy".into();
+    assert!(ServingSystem::new(cfg).unwrap().run().is_err());
+}
+
+#[test]
+fn unknown_tier_is_rejected_at_construction() {
+    let Some(mut cfg) = config(5, "gus") else { return };
+    cfg.edge_tiers = vec!["hallucinated".into()];
+    assert!(ServingSystem::new(cfg).is_err());
+}
+
+#[test]
+fn congestion_degrades_local_all_more_than_gus() {
+    // The core of Fig. 1(e): under pressure the greedy mix beats
+    // forced-local. One seed, both policies, same workload.
+    let Some(mut gus_cfg) = config(150, "gus") else { return };
+    gus_cfg.window_ms = 20_000.0;
+    let Some(mut local_cfg) = config(150, "local-all") else { return };
+    local_cfg.window_ms = 20_000.0;
+    let gus = ServingSystem::new(gus_cfg).unwrap().run().unwrap();
+    let local = ServingSystem::new(local_cfg).unwrap().run().unwrap();
+    assert!(
+        gus.satisfied_pct() > local.satisfied_pct(),
+        "gus {:.1}% ≤ local-all {:.1}% under congestion",
+        gus.satisfied_pct(),
+        local.satisfied_pct()
+    );
+}
