@@ -1,0 +1,61 @@
+//! Bench: the scenario sweep runner — seeds × policies DES fan-out on
+//! `std::thread` workers. Tracks wall-clock scaling vs worker count for
+//! each built-in scenario (the sweep should scale near-linearly until
+//! the per-run allocation traffic binds).
+//!
+//! Scale knobs:
+//!   EDGEUS_BENCH_SEEDS     seeds per policy (default 8)
+//!   EDGEUS_BENCH_HORIZON_S virtual horizon per run (default 60)
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::scenario::{run_sweep, Script, SweepConfig};
+use edgeus::sim::DesConfig;
+
+fn main() {
+    let seeds: usize = std::env::var("EDGEUS_BENCH_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let horizon_s: f64 = std::env::var("EDGEUS_BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60.0);
+
+    let mut base = DesConfig::default();
+    base.horizon_ms = horizon_s * 1e3;
+    base.arrival_rate_per_s = 8.0;
+    let num_edges = base.scenario.topology.num_edge;
+    let policies = vec!["gus".to_string(), "local-all".to_string()];
+
+    let mut results = Vec::new();
+    for name in Script::builtin_names() {
+        base.script = Script::builtin(name, base.horizon_ms, num_edges);
+        for threads in [1usize, 4] {
+            let cfg = SweepConfig {
+                base: base.clone(),
+                policies: policies.clone(),
+                num_seeds: seeds,
+                threads,
+            };
+            let bencher = Bencher::new(1, 3).with_items((seeds * policies.len()) as f64);
+            results.push(bencher.run(&format!("{name}_t{threads}"), || run_sweep(&cfg)));
+        }
+    }
+    println!(
+        "{}",
+        report("scenario sweep (items = DES runs per iteration)", &results)
+    );
+
+    // Summary sanity line: one full sweep's aggregate per policy.
+    base.script = Script::builtin("flash-crowd", base.horizon_ms, num_edges);
+    let cfg = SweepConfig { base, policies, num_seeds: seeds, threads: 4 };
+    for sw in run_sweep(&cfg) {
+        println!(
+            "flash-crowd {}: satisfied {:.1}% ±{:.1}, dropped {:.1}%",
+            sw.policy,
+            sw.satisfied_pct.mean(),
+            sw.satisfied_pct.ci95(),
+            sw.drop_pct.mean(),
+        );
+    }
+}

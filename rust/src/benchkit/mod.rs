@@ -4,7 +4,48 @@
 //! `harness = false` binaries built on this.
 
 use crate::util::stats::{percentile, Accumulator};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
+
+/// Fan `f` out over `items` on `threads` scoped `std::thread` workers.
+///
+/// Work is pulled from a shared atomic cursor (so uneven item costs load-
+/// balance), but results come back **in item order** regardless of which
+/// worker ran what — callers aggregate deterministically. `f` receives
+/// `(index, &item)`. Panics in `f` propagate when the scope joins.
+///
+/// This is the substrate for the scenario sweep runner (seeds × policies
+/// DES fan-out) and any future embarrassingly-parallel harness work.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(items.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map worker completed"))
+        .collect()
+}
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -129,5 +170,32 @@ mod tests {
         assert!(md.contains("## title"));
         assert!(md.contains("| a |"));
         assert!(md.contains("| b |"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_item_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 7, |i, x| {
+            assert_eq!(i, *x);
+            x * 2
+        });
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_thread_count_does_not_change_results() {
+        let items: Vec<u64> = (0..40).collect();
+        let f = |_: usize, x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15) >> 7;
+        let a = parallel_map(&items, 1, f);
+        let b = parallel_map(&items, 16, f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_oversized_thread_counts() {
+        let empty: Vec<u8> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, x| *x).is_empty());
+        let one = [41u8];
+        assert_eq!(parallel_map(&one, 999, |_, x| x + 1), vec![42]);
     }
 }

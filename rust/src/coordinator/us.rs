@@ -158,22 +158,45 @@ impl Schedule {
 pub struct CapacityTracker {
     pub gamma: Vec<f64>,
     pub eta: Vec<f64>,
+    /// Availability snapshot: a down covering edge cannot forward
+    /// offloads, even under the Happy-Communication relaxation (the
+    /// relaxation drops the η *budget*, not the physical link).
+    up: Vec<bool>,
     mode: ConstraintMode,
 }
 
 impl CapacityTracker {
+    /// Down servers (scenario outages) contribute zero γ and zero η —
+    /// even the Happy-* relaxations cannot route work through them, and
+    /// a down covering edge cannot forward offloads.
     pub fn new(inst: &ProblemInstance, mode: ConstraintMode) -> CapacityTracker {
         CapacityTracker {
-            gamma: inst.topology.servers.iter().map(|s| s.gamma).collect(),
-            eta: inst.topology.servers.iter().map(|s| s.eta).collect(),
+            gamma: inst
+                .topology
+                .servers
+                .iter()
+                .map(|s| if s.up { s.gamma } else { 0.0 })
+                .collect(),
+            eta: inst
+                .topology
+                .servers
+                .iter()
+                .map(|s| if s.up { s.eta } else { 0.0 })
+                .collect(),
+            up: inst.topology.servers.iter().map(|s| s.up).collect(),
             mode,
         }
     }
 
     /// Would serving `req` via `cand` fit the residual capacities?
     /// Computation (2d) is charged at the serving server; communication
-    /// (2e) at the covering server, only when offloading.
+    /// (2e) at the covering server, only when offloading. A down covering
+    /// edge blocks offloading unconditionally — no mode relaxes a dead
+    /// link.
     pub fn fits(&self, req: &Request, cand: &Candidate) -> bool {
+        if cand.offloaded && !self.up[req.covering.0] {
+            return false;
+        }
         if self.mode.computation && self.gamma[cand.server.0] < cand.comp_cost - 1e-12 {
             return false;
         }
@@ -230,6 +253,17 @@ pub fn validate_schedule(
         // (2f): server/tier must exist and be placed.
         if cand.server.0 >= inst.num_servers() {
             return Err(format!("request {i} assigned to unknown server"));
+        }
+        // A down server (scenario outage) can serve nothing, under every
+        // constraint relaxation; a down covering edge cannot forward.
+        if !inst.topology.servers[cand.server.0].up {
+            return Err(format!("request {i}: assigned to down server {}", cand.server));
+        }
+        if cand.offloaded && !inst.topology.servers[req.covering.0].up {
+            return Err(format!(
+                "request {i}: offloaded through down covering edge {}",
+                req.covering
+            ));
         }
         if !inst.placement.has(cand.server.0, req.service, cand.tier) {
             return Err(format!("request {i}: model not placed on {}", cand.server));
@@ -337,5 +371,94 @@ mod tests {
     #[test]
     fn empty_schedule_objective_zero() {
         assert_eq!(Schedule::empty(0).objective(), 0.0);
+    }
+
+    fn two_server_instance(second_up: bool) -> ProblemInstance {
+        use crate::model::server::{Server, ServerClass};
+        use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
+        use crate::model::Topology;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(1);
+        let topology = Topology::explicit(
+            vec![
+                Server::new(0, ServerClass::EdgeMedium).with_capacities(5.0, 5.0),
+                Server::new(1, ServerClass::EdgeLarge)
+                    .with_capacities(5.0, 5.0)
+                    .with_up(second_up),
+            ],
+            vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 1, num_tiers: 1, ..Default::default() },
+            &mut rng,
+        );
+        let placement = Placement::full(&catalog, 2);
+        let requests = vec![Request::new(0, 0, 0).with_qos(0.0, 100_000.0)];
+        ProblemInstance::new(topology, catalog, placement, requests)
+            .with_normalization(100.0, 12_000.0)
+    }
+
+    #[test]
+    fn tracker_zeroes_down_servers() {
+        let inst = two_server_instance(false);
+        let t = CapacityTracker::new(&inst, ConstraintMode::STRICT);
+        assert_eq!(t.gamma[0], 5.0);
+        assert_eq!(t.eta[0], 5.0);
+        assert_eq!(t.gamma[1], 0.0, "down server must expose no γ");
+        assert_eq!(t.eta[1], 0.0, "down server must expose no η");
+    }
+
+    #[test]
+    fn down_covering_edge_blocks_offload_even_when_eta_relaxed() {
+        // Server 1 is up (a fine target), but covering server 0 is down:
+        // offloading must fail in every mode — Happy-Communication drops
+        // the η budget, not the physical link.
+        let mut inst = two_server_instance(true);
+        inst.topology.servers[0].up = false;
+        let req = &inst.requests[0];
+        let tier = TierId(0);
+        let profile = inst.catalog.profile(req.service, tier);
+        let cand = Candidate {
+            server: ServerId(1),
+            tier,
+            accuracy_pct: profile.accuracy_pct,
+            completion_ms: inst.completion_ms(req, ServerId(1), tier),
+            comp_cost: profile.comp_cost,
+            comm_cost: profile.comm_cost,
+            offloaded: true,
+        };
+        for mode in [ConstraintMode::STRICT, ConstraintMode::HAPPY_COMMUNICATION] {
+            let tracker = CapacityTracker::new(&inst, mode);
+            assert!(!tracker.fits(req, &cand), "mode {mode:?} must block the dead link");
+        }
+        let mut s = Schedule::empty(1);
+        s.slots[0] = Some(Assignment { request: RequestId(0), candidate: cand, us: 0.1 });
+        let err = validate_schedule(&inst, &s, ConstraintMode::HAPPY_COMMUNICATION).unwrap_err();
+        assert!(err.contains("down covering edge"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_down_server_assignment() {
+        let inst = two_server_instance(false);
+        let req = &inst.requests[0];
+        let tier = TierId(0);
+        let server = ServerId(1);
+        let profile = inst.catalog.profile(req.service, tier);
+        let candidate = Candidate {
+            server,
+            tier,
+            accuracy_pct: profile.accuracy_pct,
+            completion_ms: inst.completion_ms(req, server, tier),
+            comp_cost: profile.comp_cost,
+            comm_cost: profile.comm_cost,
+            offloaded: true,
+        };
+        let mut s = Schedule::empty(1);
+        s.slots[0] = Some(Assignment { request: RequestId(0), candidate, us: 0.1 });
+        let err = validate_schedule(&inst, &s, ConstraintMode::STRICT).unwrap_err();
+        assert!(err.contains("down server"), "{err}");
+        // The identical assignment is fine once the server is back up.
+        let inst_up = two_server_instance(true);
+        validate_schedule(&inst_up, &s, ConstraintMode::STRICT).unwrap();
     }
 }

@@ -1,6 +1,7 @@
 //! Figure-regeneration harness: every panel of the paper's Fig. 1 plus
 //! the in-text GUS-vs-optimal comparison, as parameter sweeps that print
-//! the same series the paper plots. See DESIGN.md §Experiment-index.
+//! the same series the paper plots, and the scenario-engine
+//! satisfaction-vs-time panels. See DESIGN.md §Experiment-index.
 //!
 //! Numerical panels (a–d) sweep one workload parameter of the §IV
 //! Monte-Carlo setup; testbed panels (e–h) are produced by
@@ -160,6 +161,44 @@ fn record_point(per_policy: &mut Vec<(String, Vec<f64>, Vec<f64>)>, stats: &[Pol
     }
 }
 
+/// Satisfaction-vs-time under a named built-in scenario: run the DES for
+/// each policy × seed (parallel sweep), resample each run's per-frame
+/// series onto the decision-frame grid, and report mean ± 95% CI per
+/// policy. The dynamic-world analogue of the Fig. 1 panels — see
+/// DESIGN.md §Experiment-index.
+pub fn run_scenario_figure(
+    name: &str,
+    base: &crate::sim::DesConfig,
+    policies: &[&str],
+    num_seeds: usize,
+) -> anyhow::Result<Series> {
+    let script = crate::scenario::Script::builtin(
+        name,
+        base.horizon_ms,
+        base.scenario.topology.num_edge,
+    )
+    .ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario {name:?} (built-ins: {})",
+            crate::scenario::Script::builtin_names().join(", ")
+        )
+    })?;
+    for p in policies {
+        if crate::coordinator::scheduler_by_name(p).is_none() {
+            anyhow::bail!("unknown policy {p:?}");
+        }
+    }
+    let mut cfg = crate::scenario::SweepConfig {
+        base: base.clone(),
+        policies: policies.iter().map(|p| p.to_string()).collect(),
+        num_seeds,
+        ..Default::default()
+    };
+    cfg.base.script = Some(script);
+    let sweeps = crate::scenario::run_sweep(&cfg);
+    Ok(crate::scenario::timeline_series(&cfg, &sweeps))
+}
+
 /// The in-text claim: GUS attains ~90% of the CPLEX optimum on small
 /// cases. Sweeps instance size; reports mean GUS/OPT objective ratio
 /// (only over instances where OPT > 0) plus both absolute objectives.
@@ -282,6 +321,23 @@ mod tests {
         let series = run_numerical_sweep(NumericalFigure::Fig1a, &cfg, &[500.0, 8000.0]);
         let gus = &series.policies.iter().find(|(n, _, _)| n == "gus").unwrap().1;
         assert!(gus[1] > gus[0], "more delay budget must help: {gus:?}");
+    }
+
+    #[test]
+    fn scenario_figure_produces_time_series() {
+        let mut base = crate::sim::DesConfig::default();
+        base.scenario = ScenarioParams {
+            topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
+            workload: WorkloadParams::default(),
+        };
+        base.horizon_ms = 18_000.0;
+        base.arrival_rate_per_s = 4.0;
+        let s = run_scenario_figure("flash-crowd", &base, &["gus"], 2).unwrap();
+        assert_eq!(s.policies.len(), 1);
+        assert_eq!(s.xs.len(), 6, "18 s horizon / 3 s frames");
+        assert!(run_scenario_figure("no-such-scenario", &base, &["gus"], 1).is_err());
+        assert!(run_scenario_figure("flash-crowd", &base, &["no-such-policy"], 1).is_err());
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod serving;
 pub mod sim;
 pub mod util;
@@ -57,7 +58,8 @@ pub mod prelude {
         Candidate, Placement, ProblemInstance, Request, Server, ServerClass, ServerId,
         ServiceCatalog, ServiceId, TierId, Topology,
     };
-    pub use crate::sim::{MonteCarlo, PolicyStats};
+    pub use crate::scenario::{run_sweep, Script, SweepConfig};
+    pub use crate::sim::{Des, DesConfig, DesReport, MonteCarlo, PolicyStats};
     pub use crate::util::rng::Rng;
     pub use crate::workload::{build_instance, ScenarioParams, WorkloadParams};
 }

@@ -6,6 +6,7 @@
 //! edgeus serve   [--scheduler gus] [--requests 200] [--scale 50]
 //! edgeus optimal-gap [--sizes 4,6,8,10] [--instances 20]
 //! edgeus simulate [--config cfg.json]
+//! edgeus scenario --name flash-crowd [--policies gus,local-all] [--seeds 8]
 //! edgeus info    [--artifacts artifacts]
 //! ```
 
@@ -25,6 +26,7 @@ fn main() {
         Some("optimal-gap") => cmd_optimal_gap(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("des") => cmd_des(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("trace") => cmd_trace(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
@@ -54,15 +56,103 @@ fn print_usage() {
          optimal-gap [--sizes 4,6,8,10] [--instances 20] [--seed S]\n  \
          simulate [--config cfg.json] [--runs N]\n  \
          des [--rates 1,4,16,64] [--policies gus,local-all] [--horizon-s 60]\n  \
+         scenario [--name flash-crowd|edge-failover|degraded-backhaul|commuter-wave]\n           \
+         [--script FILE.json] [--policies gus,local-all] [--seeds 8] [--seed 7]\n           \
+         [--rate 8] [--horizon-s 120] [--threads N] [--save FILE.json] [--csv PATH] [--list]\n  \
          trace [--out trace.json] [--rate 4] [--horizon-s 60] | [--stats FILE]\n  \
          info [--artifacts DIR]"
     );
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use edgeus::scenario::{run_sweep, timeline_series, Script, SweepConfig};
+    if args.flag("list") {
+        println!("built-in scenarios: {}", Script::builtin_names().join(", "));
+        return Ok(());
+    }
+    let mut base = edgeus::sim::DesConfig::default();
+    base.horizon_ms = args.get_f64("horizon-s", 120.0) * 1e3;
+    base.arrival_rate_per_s = args.get_f64("rate", 8.0);
+    base.seed = args.get_u64("seed", base.seed);
+    anyhow::ensure!(base.horizon_ms > 0.0, "--horizon-s must be positive");
+    anyhow::ensure!(base.arrival_rate_per_s > 0.0, "--rate must be positive");
+    let num_seeds = args.get_usize("seeds", 8);
+    anyhow::ensure!(num_seeds > 0, "--seeds must be at least 1");
+    let script = match args.get("script") {
+        Some(path) => {
+            let s = Script::load(path)?;
+            s.validate(
+                base.scenario.topology.num_edge + base.scenario.topology.num_cloud,
+                base.scenario.topology.num_edge,
+                base.scenario.catalog.num_services,
+                base.scenario.catalog.num_tiers,
+            )
+            .map_err(|e| anyhow::anyhow!("invalid script {path}: {e}"))?;
+            s
+        }
+        None => {
+            let name = args.get_or("name", "flash-crowd");
+            Script::builtin(name, base.horizon_ms, base.scenario.topology.num_edge)
+                .with_context(|| format!("unknown scenario {name} (see --list)"))?
+        }
+    };
+    if let Some(path) = args.get("save") {
+        script.save(path)?;
+        eprintln!("wrote {path}");
+    }
+    let policies = args
+        .get_list("policies")
+        .unwrap_or_else(|| vec!["gus".into(), "local-all".into()]);
+    for p in &policies {
+        anyhow::ensure!(
+            edgeus::coordinator::scheduler_by_name(p).is_some(),
+            "unknown policy {p}"
+        );
+    }
+    base.script = Some(script.clone());
+    let cfg = SweepConfig {
+        base,
+        policies,
+        num_seeds,
+        threads: args.get_usize("threads", edgeus::sim::montecarlo::default_threads()),
+    };
+    eprintln!(
+        "scenario '{}': {} events, {} policies x {} seeds on {} threads, {:.0}s horizon @ {} req/s",
+        script.name,
+        script.len(),
+        cfg.policies.len(),
+        cfg.num_seeds,
+        cfg.threads,
+        cfg.base.horizon_ms / 1e3,
+        cfg.base.arrival_rate_per_s,
+    );
+    let sweeps = run_sweep(&cfg);
+    println!("\n# scenario '{}' — {} seeds per policy\n", script.name, cfg.num_seeds);
+    println!("| policy | satisfied % (±95% CI) | served % | dropped+rejected % | mean completion (ms) |");
+    println!("|---|---|---|---|---|");
+    for s in &sweeps {
+        println!(
+            "| {} | {:.2} ±{:.2} | {:.2} | {:.2} | {:.0} |",
+            s.policy,
+            s.satisfied_pct.mean(),
+            s.satisfied_pct.ci95(),
+            s.served_pct.mean(),
+            s.drop_pct.mean(),
+            s.mean_completion_ms.mean(),
+        );
+    }
+    let series = timeline_series(&cfg, &sweeps);
+    println!("\n# per-frame satisfaction (%) vs time\n\n{}", series.to_markdown());
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, series.to_csv())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_des(args: &Args) -> Result<()> {
     let rates: Vec<f64> = args
-        .get_list("rates")
-        .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+        .get_f64_list("rates")
         .unwrap_or_else(|| vec![1.0, 4.0, 16.0, 64.0, 150.0]);
     let policies = args
         .get_list("policies")

@@ -99,11 +99,16 @@ impl ProblemInstance {
     }
 
     /// Enumerate all placement-feasible candidates for request `i`.
-    /// No QoS or capacity filtering here (schedulers differ on that).
+    /// No QoS or capacity filtering here (schedulers differ on that) —
+    /// but down servers (scenario outages) are excluded outright: every
+    /// policy, including the Happy-* relaxations, must respect them.
     pub fn candidates(&self, i: usize) -> Vec<Candidate> {
         let req = &self.requests[i];
         let mut out = Vec::new();
         for j in 0..self.topology.len() {
+            if !self.topology.servers[j].up {
+                continue;
+            }
             let server = ServerId(j);
             for tier in self
                 .placement
@@ -215,6 +220,15 @@ mod tests {
         // 4 servers × 3 tiers.
         assert_eq!(cands.len(), 12);
         assert!(cands.iter().any(|c| c.server == ServerId(3)), "cloud candidate present");
+    }
+
+    #[test]
+    fn candidates_skip_down_servers() {
+        let mut inst = tiny_instance();
+        inst.topology.servers[1].up = false;
+        let cands = inst.candidates(0);
+        assert_eq!(cands.len(), 9, "3 live servers × 3 tiers");
+        assert!(cands.iter().all(|c| c.server != ServerId(1)));
     }
 
     #[test]

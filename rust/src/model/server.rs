@@ -89,6 +89,11 @@ pub struct Server {
     pub gamma: f64,
     /// Communication capacity η_j (constraint 2e).
     pub eta: f64,
+    /// Availability: the scenario engine flips this on `ServerDown`/
+    /// `ServerUp` events. A down server is not a candidate target and its
+    /// γ/η budgets are unusable (its coverage still exists — queued
+    /// requests covered by it drain as drops).
+    pub up: bool,
 }
 
 impl Server {
@@ -98,12 +103,18 @@ impl Server {
             class,
             gamma: class.default_gamma(),
             eta: class.default_eta(),
+            up: true,
         }
     }
 
     pub fn with_capacities(mut self, gamma: f64, eta: f64) -> Server {
         self.gamma = gamma;
         self.eta = eta;
+        self
+    }
+
+    pub fn with_up(mut self, up: bool) -> Server {
+        self.up = up;
         self
     }
 
@@ -151,5 +162,14 @@ mod tests {
         assert_eq!(s.eta, 9.0);
         assert_eq!(s.id, ServerId(3));
         assert!(!s.is_cloud());
+    }
+
+    #[test]
+    fn servers_start_up_and_can_be_downed() {
+        let s = Server::new(0, ServerClass::EdgeMedium);
+        assert!(s.up, "servers must default to available");
+        let s = s.with_up(false);
+        assert!(!s.up);
+        assert!(s.with_up(true).up);
     }
 }

@@ -240,6 +240,30 @@ impl Placement {
             .collect()
     }
 
+    /// Add one (service, tier) replica on `server` (idempotent). On a
+    /// cloud-has-all server this is a no-op: it already holds everything.
+    /// Used by the scenario engine's `PlacementChange` events.
+    pub fn place(&mut self, server: usize, k: ServiceId, l: TierId) {
+        if self.cloud_has_all[server] {
+            return;
+        }
+        if let Err(pos) = self.on[server].binary_search(&(k, l)) {
+            self.on[server].insert(pos, (k, l));
+        }
+    }
+
+    /// Remove one (service, tier) replica from `server` (idempotent).
+    /// Cloud-has-all servers hold their catalog implicitly and cannot
+    /// evict per-replica; the call is a no-op there.
+    pub fn evict(&mut self, server: usize, k: ServiceId, l: TierId) {
+        if self.cloud_has_all[server] {
+            return;
+        }
+        if let Ok(pos) = self.on[server].binary_search(&(k, l)) {
+            self.on[server].remove(pos);
+        }
+    }
+
     pub fn num_servers(&self) -> usize {
         self.on.len()
     }
@@ -349,6 +373,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn place_and_evict_round_trip() {
+        let c = catalog();
+        let mut p = Placement::explicit(vec![Vec::new(), Vec::new()], vec![false, true]);
+        let (k, l) = (ServiceId(2), TierId(1));
+        assert!(!p.has(0, k, l));
+        p.place(0, k, l);
+        p.place(0, k, l); // idempotent
+        assert!(p.has(0, k, l));
+        assert_eq!(p.tiers_of(0, k, c.num_tiers), vec![l]);
+        p.evict(0, k, l);
+        p.evict(0, k, l); // idempotent
+        assert!(!p.has(0, k, l));
+        // Cloud-has-all servers are unaffected by per-replica mutation.
+        p.evict(1, k, l);
+        assert!(p.has(1, k, l));
+    }
+
+    #[test]
+    fn place_keeps_sorted_order_for_binary_search() {
+        let mut p = Placement::explicit(vec![Vec::new()], vec![false]);
+        p.place(0, ServiceId(3), TierId(0));
+        p.place(0, ServiceId(1), TierId(2));
+        p.place(0, ServiceId(1), TierId(0));
+        for (k, l) in [(1, 0), (1, 2), (3, 0)] {
+            assert!(p.has(0, ServiceId(k), TierId(l)));
+        }
+        assert!(!p.has(0, ServiceId(2), TierId(0)));
     }
 
     #[test]

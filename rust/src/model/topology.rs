@@ -108,6 +108,13 @@ impl Topology {
         self.comm_ms[a.0][b.0] = ms;
     }
 
+    /// Snapshot of the full comm matrix. The scenario engine keeps this
+    /// as the baseline that `BandwidthDrift` events scale against, so a
+    /// drift back to factor 1.0 restores the exact original delays.
+    pub fn comm_matrix(&self) -> Vec<Vec<f64>> {
+        self.comm_ms.clone()
+    }
+
     pub fn edge_ids(&self) -> Vec<ServerId> {
         self.servers.iter().filter(|s| !s.is_cloud()).map(|s| s.id).collect()
     }
@@ -192,6 +199,15 @@ mod tests {
         let mut t = topo();
         t.set_comm_ms(ServerId(0), ServerId(1), 99.0);
         assert_eq!(t.comm_ms(ServerId(0), ServerId(1)), 99.0);
+    }
+
+    #[test]
+    fn comm_matrix_snapshot_is_decoupled() {
+        let mut t = topo();
+        let snap = t.comm_matrix();
+        t.set_comm_ms(ServerId(0), ServerId(1), 99.0);
+        assert_ne!(snap[0][1], 99.0, "snapshot must not alias the live matrix");
+        assert_eq!(snap[0][2], t.comm_ms(ServerId(0), ServerId(2)));
     }
 
     #[test]

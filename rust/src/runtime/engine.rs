@@ -12,6 +12,90 @@ use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::time::Instant;
 
+#[cfg(not(feature = "xla"))]
+use xla_stub as xla;
+
+/// Build-time stand-in for the external `xla` crate (absent from the
+/// offline registry — see DESIGN.md §Substitutions). It mirrors exactly
+/// the API surface this module consumes so the whole crate compiles and
+/// tests without PJRT; `PjRtClient::cpu()` fails with a clear message, so
+/// every artifact-dependent path (serving, `--load`, the e2e tests)
+/// degrades to its documented "run `make artifacts`" skip behaviour.
+/// Building with `--features xla` (plus the real dependency) swaps this
+/// out without touching the engine code.
+#[cfg(not(feature = "xla"))]
+mod xla_stub {
+    use anyhow::{bail, Result};
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient> {
+            bail!("edgeus was built without the `xla` feature: PJRT execution is unavailable")
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+            bail!("xla feature disabled")
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+            bail!("xla feature disabled")
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+            bail!("xla feature disabled")
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            bail!("xla feature disabled")
+        }
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn vec1(_xs: &[f32]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+            bail!("xla feature disabled")
+        }
+
+        pub fn to_tuple1(self) -> Result<Literal> {
+            bail!("xla feature disabled")
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            bail!("xla feature disabled")
+        }
+    }
+}
+
 /// One compiled executable plus its metadata.
 struct Loaded {
     info: ArtifactInfo,

@@ -1,0 +1,383 @@
+//! The live half of the scenario subsystem: replays a [`Script`] against
+//! a running world, mutating the DES's `Topology`/`Placement` in place at
+//! decision-frame boundaries so schedulers always see the current state.
+//!
+//! Design invariants:
+//!
+//! * **Frame-boundary application** — `advance(now, …)` is called at each
+//!   decision; every event with `at_ms <= now` applies exactly once, in
+//!   script order. Between decisions the world is frozen, which is what
+//!   the paper's frame-granular control plane would observe anyway.
+//! * **Restorability** — `ServerUp` restores the exact pre-outage
+//!   capacities (the `Server::up` flag masks them, nothing is
+//!   overwritten), and `BandwidthDrift` scales against a baseline
+//!   snapshot of the comm matrix, so `factor = 1.0` is a bit-exact
+//!   recovery.
+//! * **Determinism** — the engine draws randomness only through the
+//!   caller's [`Rng`] (for weighted covering-edge choice), so a DES run
+//!   with a script is exactly as reproducible as one without.
+
+use crate::model::service::{Placement, ServiceId, TierId};
+use crate::model::{ServerId, Topology};
+use crate::scenario::script::{EventKind, Script, ScriptedEvent};
+use crate::util::rng::Rng;
+use crate::workload::pick_weighted;
+
+/// Replays one script over one run. Create per DES run.
+pub struct ScenarioEngine {
+    script: Script,
+    /// Next unapplied event (events are time-sorted by `Script::new`).
+    cursor: usize,
+    /// Pre-scenario comm matrix; `BandwidthDrift` scales against this.
+    baseline_comm: Vec<Vec<f64>>,
+    /// Arrival weight per edge *position* (index into the edge list).
+    weights: Vec<f64>,
+    /// Server id of each edge position.
+    edge_ids: Vec<usize>,
+    burst_multiplier: f64,
+    burst_until_ms: f64,
+    /// Catalog bounds for validating `PlacementChange` targets.
+    num_services: usize,
+    num_tiers: usize,
+    /// Total events applied so far (skipped out-of-range events excluded).
+    pub applied_total: u64,
+}
+
+impl ScenarioEngine {
+    pub fn new(
+        script: Script,
+        topology: &Topology,
+        num_services: usize,
+        num_tiers: usize,
+    ) -> ScenarioEngine {
+        let edge_ids: Vec<usize> = topology.edge_ids().iter().map(|s| s.0).collect();
+        ScenarioEngine {
+            cursor: 0,
+            baseline_comm: topology.comm_matrix(),
+            weights: vec![1.0; edge_ids.len()],
+            edge_ids,
+            burst_multiplier: 1.0,
+            burst_until_ms: f64::NEG_INFINITY,
+            num_services,
+            num_tiers,
+            applied_total: 0,
+            script,
+        }
+    }
+
+    /// Apply every event due at or before `now_ms`. Returns how many
+    /// applied at this boundary (out-of-range targets are skipped, not
+    /// counted — `Script::validate` exists to reject those up front).
+    pub fn advance(
+        &mut self,
+        now_ms: f64,
+        topology: &mut Topology,
+        placement: &mut Placement,
+    ) -> u64 {
+        let mut applied = 0u64;
+        while self.cursor < self.script.events.len()
+            && self.script.events[self.cursor].at_ms <= now_ms
+        {
+            let ev = self.script.events[self.cursor].clone();
+            self.cursor += 1;
+            if self.apply(&ev, topology, placement) {
+                applied += 1;
+            }
+        }
+        self.applied_total += applied;
+        applied
+    }
+
+    fn apply(
+        &mut self,
+        ev: &ScriptedEvent,
+        topology: &mut Topology,
+        placement: &mut Placement,
+    ) -> bool {
+        match &ev.kind {
+            EventKind::LoadBurst { rate_multiplier, duration_ms } => {
+                self.burst_multiplier = *rate_multiplier;
+                self.burst_until_ms = ev.at_ms + duration_ms;
+                true
+            }
+            EventKind::ServerDown { server } => self.set_up(*server, false, topology),
+            EventKind::ServerUp { server } => self.set_up(*server, true, topology),
+            EventKind::BandwidthDrift { link, factor } => {
+                let n = topology.len();
+                for a in 0..n {
+                    let a_cloud = topology.servers[a].is_cloud();
+                    for b in 0..n {
+                        if a == b {
+                            continue;
+                        }
+                        let b_cloud = topology.servers[b].is_cloud();
+                        if link.matches(a_cloud, b_cloud, a, b) {
+                            topology.set_comm_ms(
+                                ServerId(a),
+                                ServerId(b),
+                                self.baseline_comm[a][b] * factor,
+                            );
+                        }
+                    }
+                }
+                true
+            }
+            EventKind::UserMobility { from_edge, to_edge, fraction } => {
+                let n = self.weights.len();
+                if *from_edge >= n || *to_edge >= n || from_edge == to_edge {
+                    return false;
+                }
+                let moved = self.weights[*from_edge] * fraction.clamp(0.0, 1.0);
+                self.weights[*from_edge] -= moved;
+                self.weights[*to_edge] += moved;
+                true
+            }
+            EventKind::PlacementChange { server, service, tier, add } => {
+                if *server >= topology.len()
+                    || *service >= self.num_services
+                    || *tier >= self.num_tiers
+                {
+                    return false;
+                }
+                if *add {
+                    placement.place(*server, ServiceId(*service), TierId(*tier));
+                } else {
+                    placement.evict(*server, ServiceId(*service), TierId(*tier));
+                }
+                true
+            }
+        }
+    }
+
+    fn set_up(&mut self, server: usize, up: bool, topology: &mut Topology) -> bool {
+        if server >= topology.len() {
+            return false;
+        }
+        topology.servers[server].up = up;
+        true
+    }
+
+    /// Current arrival-rate multiplier (1.0 outside any burst window).
+    /// The burst activates at the frame boundary where its event applies
+    /// and expires by wall time, so the window end needs no second event.
+    /// Bursts are last-writer-wins (see [`EventKind::LoadBurst`]).
+    pub fn arrival_multiplier(&self, now_ms: f64) -> f64 {
+        if now_ms < self.burst_until_ms {
+            self.burst_multiplier
+        } else {
+            1.0
+        }
+    }
+
+    /// Weighted covering-edge choice among *live* edges — users covered
+    /// by a down edge re-home to the remaining coverage (their weight
+    /// share is masked while the edge is down, restored when it returns).
+    /// When every live edge has zero weight (e.g. mobility concentrated
+    /// everything on an edge that then died), the fallback is uniform
+    /// over the live edges only; a dead edge receives arrivals only in
+    /// the total-blackout case where no edge is up at all.
+    ///
+    /// Availability is read from the live `topology` (the single source
+    /// of truth the engine mutates), so out-of-band `Server::up` flips —
+    /// e.g. the planned serving-runtime outage plumbing — are honoured.
+    pub fn pick_edge(&self, topology: &Topology, rng: &mut Rng) -> usize {
+        let live = |pos: usize| topology.servers[self.edge_ids[pos]].up;
+        let masked: Vec<f64> = self
+            .weights
+            .iter()
+            .enumerate()
+            .map(|(pos, w)| if live(pos) { *w } else { 0.0 })
+            .collect();
+        if masked.iter().any(|w| *w > 0.0) {
+            return pick_weighted(&masked, rng);
+        }
+        let uniform: Vec<f64> = (0..masked.len())
+            .map(|pos| if live(pos) { 1.0 } else { 0.0 })
+            .collect();
+        pick_weighted(&uniform, rng)
+    }
+
+    /// Remaining unapplied events.
+    pub fn pending(&self) -> usize {
+        self.script.events.len() - self.cursor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::service::{CatalogParams, ServiceCatalog};
+    use crate::model::topology::TopologyParams;
+    use crate::scenario::script::LinkClass;
+
+    fn world() -> (Topology, Placement, ServiceCatalog) {
+        let mut rng = Rng::new(3);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let classes: Vec<_> = topology.servers.iter().map(|s| s.class).collect();
+        let placement = Placement::random(&catalog, &classes, &mut rng);
+        (topology, placement, catalog)
+    }
+
+    fn engine_for(script: Script, topo: &Topology) -> ScenarioEngine {
+        ScenarioEngine::new(script, topo, 4, 3)
+    }
+
+    #[test]
+    fn events_apply_once_in_time_order() {
+        let (mut topo, mut plc, _) = world();
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent { at_ms: 1000.0, kind: EventKind::ServerDown { server: 0 } },
+                ScriptedEvent { at_ms: 5000.0, kind: EventKind::ServerUp { server: 0 } },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        assert_eq!(e.advance(500.0, &mut topo, &mut plc), 0);
+        assert_eq!(e.advance(3000.0, &mut topo, &mut plc), 1);
+        assert!(!topo.servers[0].up);
+        // Same boundary again: nothing re-applies.
+        assert_eq!(e.advance(3000.0, &mut topo, &mut plc), 0);
+        assert_eq!(e.pending(), 1);
+        assert_eq!(e.advance(6000.0, &mut topo, &mut plc), 1);
+        assert!(topo.servers[0].up);
+        assert_eq!(e.applied_total, 2);
+    }
+
+    #[test]
+    fn server_up_restores_exact_capacities() {
+        let (mut topo, mut plc, _) = world();
+        let before = (topo.servers[2].gamma, topo.servers[2].eta);
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent { at_ms: 0.0, kind: EventKind::ServerDown { server: 2 } },
+                ScriptedEvent { at_ms: 10.0, kind: EventKind::ServerUp { server: 2 } },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        e.advance(20.0, &mut topo, &mut plc);
+        assert!(topo.servers[2].up);
+        assert_eq!((topo.servers[2].gamma, topo.servers[2].eta), before);
+    }
+
+    #[test]
+    fn bandwidth_drift_scales_and_restores_baseline() {
+        let (mut topo, mut plc, _) = world();
+        let baseline = topo.comm_matrix();
+        let cloud = topo.cloud_ids()[0].0;
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent {
+                    at_ms: 0.0,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeCloud, factor: 10.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 100.0,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeCloud, factor: 1.0 },
+                },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        e.advance(0.0, &mut topo, &mut plc);
+        assert_eq!(
+            topo.comm_ms(ServerId(0), ServerId(cloud)),
+            baseline[0][cloud] * 10.0
+        );
+        // Edge↔edge links untouched.
+        assert_eq!(topo.comm_ms(ServerId(0), ServerId(1)), baseline[0][1]);
+        e.advance(100.0, &mut topo, &mut plc);
+        assert_eq!(topo.comm_matrix(), baseline, "factor 1.0 must be bit-exact");
+    }
+
+    #[test]
+    fn mobility_moves_weight_and_outage_masks_it() {
+        let (mut topo, mut plc, _) = world();
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent {
+                    at_ms: 0.0,
+                    kind: EventKind::UserMobility { from_edge: 1, to_edge: 0, fraction: 1.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 0.0,
+                    kind: EventKind::UserMobility { from_edge: 2, to_edge: 0, fraction: 1.0 },
+                },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        e.advance(0.0, &mut topo, &mut plc);
+        // All weight sits on edge 0 now.
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            assert_eq!(e.pick_edge(&topo, &mut rng), 0);
+        }
+        // Down edge 0 (out-of-band flip — the engine reads the live
+        // topology): all live weight is gone, so arrivals re-home
+        // uniformly over the *live* edges — never to the dead one.
+        topo.servers[0].up = false;
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[e.pick_edge(&topo, &mut rng)] = true;
+        }
+        assert!(!seen[0], "dead edge must receive no arrivals while others live");
+        assert!(seen[1] && seen[2], "fallback must spread load: {seen:?}");
+    }
+
+    #[test]
+    fn burst_window_multiplies_then_expires() {
+        let (mut topo, mut plc, _) = world();
+        let script = Script::new(
+            "s",
+            vec![ScriptedEvent {
+                at_ms: 1000.0,
+                kind: EventKind::LoadBurst { rate_multiplier: 6.0, duration_ms: 2000.0 },
+            }],
+        );
+        let mut e = engine_for(script, &topo);
+        assert_eq!(e.arrival_multiplier(1500.0), 1.0, "not applied yet");
+        e.advance(1000.0, &mut topo, &mut plc);
+        assert_eq!(e.arrival_multiplier(1500.0), 6.0);
+        assert_eq!(e.arrival_multiplier(2999.0), 6.0);
+        assert_eq!(e.arrival_multiplier(3000.0), 1.0, "window closed");
+    }
+
+    #[test]
+    fn placement_change_adds_and_evicts() {
+        let (mut topo, mut plc, _) = world();
+        // Force a known hole, then script it back in and out.
+        plc.evict(0, ServiceId(1), TierId(2));
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent {
+                    at_ms: 0.0,
+                    kind: EventKind::PlacementChange { server: 0, service: 1, tier: 2, add: true },
+                },
+                ScriptedEvent {
+                    at_ms: 10.0,
+                    kind: EventKind::PlacementChange { server: 0, service: 1, tier: 2, add: false },
+                },
+                // Out-of-range target: skipped, not applied.
+                ScriptedEvent {
+                    at_ms: 10.0,
+                    kind: EventKind::PlacementChange { server: 0, service: 99, tier: 0, add: true },
+                },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        assert_eq!(e.advance(0.0, &mut topo, &mut plc), 1);
+        assert!(plc.has(0, ServiceId(1), TierId(2)));
+        assert_eq!(e.advance(10.0, &mut topo, &mut plc), 1, "bad target skipped");
+        assert!(!plc.has(0, ServiceId(1), TierId(2)));
+    }
+}

@@ -1,0 +1,30 @@
+//! Dynamic scenario engine: scripted world events over the discrete-event
+//! simulator, plus a parallel sweep runner.
+//!
+//! The paper evaluates a static snapshot — one topology, one load, one
+//! decision round at a time. Production edge systems live in the dynamic
+//! regime instead: bandwidth drifts, servers fail and recover, crowds
+//! flash, users commute. This subsystem makes those worlds scriptable:
+//!
+//! * [`script`] — the event model ([`Script`] of typed [`ScriptedEvent`]s:
+//!   `LoadBurst`, `ServerDown`/`ServerUp`, `BandwidthDrift`,
+//!   `UserMobility`, `PlacementChange`), JSON load/save, and the built-in
+//!   library (`flash-crowd`, `edge-failover`, `degraded-backhaul`,
+//!   `commuter-wave`);
+//! * [`engine`] — the [`ScenarioEngine`] that replays a script against a
+//!   live `Topology`/`Placement` at decision-frame boundaries inside
+//!   [`crate::sim::des`], so schedulers always see the mutated world;
+//! * [`sweep`] — the parallel seeds × policies runner
+//!   ([`run_sweep`]) with mean/CI aggregation and satisfaction-vs-time
+//!   resampling ([`timeline_series`]), exposed as the `edgeus scenario`
+//!   CLI subcommand and the scenario figures.
+//!
+//! See DESIGN.md §Scenario-engine for the full design notes.
+
+pub mod engine;
+pub mod script;
+pub mod sweep;
+
+pub use engine::ScenarioEngine;
+pub use script::{EventKind, LinkClass, Script, ScriptedEvent, BUILTIN_NAMES};
+pub use sweep::{run_sweep, timeline_on_grid, timeline_series, PolicySweep, SweepConfig};

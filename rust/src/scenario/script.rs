@@ -1,0 +1,587 @@
+//! The scenario event model: a time-ordered script of typed events that
+//! the [`crate::scenario::ScenarioEngine`] applies to a live world while
+//! the discrete-event simulator runs.
+//!
+//! Scripts serialize to/from JSON through [`crate::util::json`], so
+//! experiments are exactly repeatable across machines (`edgeus scenario
+//! --save s.json` / `--script s.json`), and a library of named built-in
+//! scenarios covers the canonical dynamic regimes from the related work:
+//! flash crowds, edge failover, backhaul degradation and commuter-style
+//! user mobility. See DESIGN.md §Scenario-engine.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Which directed links a [`EventKind::BandwidthDrift`] touches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkClass {
+    /// Every link with a cloud endpoint (the backhaul).
+    EdgeCloud,
+    /// Every edge↔edge peering link.
+    EdgeEdge,
+    /// Every link in the system.
+    All,
+    /// One directed link `a → b`.
+    Pair { a: usize, b: usize },
+}
+
+impl LinkClass {
+    /// Does the directed link `a → b` (with the given cloud-ness of its
+    /// endpoints) belong to this class?
+    pub fn matches(&self, a_is_cloud: bool, b_is_cloud: bool, a: usize, b: usize) -> bool {
+        match self {
+            LinkClass::All => true,
+            LinkClass::EdgeCloud => a_is_cloud || b_is_cloud,
+            LinkClass::EdgeEdge => !a_is_cloud && !b_is_cloud,
+            LinkClass::Pair { a: pa, b: pb } => *pa == a && *pb == b,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            LinkClass::EdgeCloud => Json::str("edge-cloud"),
+            LinkClass::EdgeEdge => Json::str("edge-edge"),
+            LinkClass::All => Json::str("all"),
+            LinkClass::Pair { a, b } => Json::obj(vec![
+                ("a", Json::num(a as f64)),
+                ("b", Json::num(b as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<LinkClass> {
+        if let Some(s) = j.as_str() {
+            return match s {
+                "edge-cloud" => Ok(LinkClass::EdgeCloud),
+                "edge-edge" => Ok(LinkClass::EdgeEdge),
+                "all" => Ok(LinkClass::All),
+                other => bail!("unknown link class {other:?}"),
+            };
+        }
+        let a = j.get("a").as_usize().context("link: a")?;
+        let b = j.get("b").as_usize().context("link: b")?;
+        Ok(LinkClass::Pair { a, b })
+    }
+}
+
+/// One typed world mutation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Multiply the Poisson arrival rate by `rate_multiplier` for
+    /// `duration_ms` after the event applies. Bursts are
+    /// last-writer-wins: a later `LoadBurst` replaces any active one
+    /// (window end included), so step-function load profiles are
+    /// expressed as a sequence of bursts, each restating its level.
+    LoadBurst { rate_multiplier: f64, duration_ms: f64 },
+    /// Take a server (edge or cloud) out of service: it stops being a
+    /// candidate target, its γ/η vanish, and covered users re-home to
+    /// the remaining live edges.
+    ServerDown { server: usize },
+    /// Bring a previously downed server back (capacities restored).
+    ServerUp { server: usize },
+    /// Set every matching link's delay to `factor ×` its *baseline*
+    /// (pre-scenario) delay. `factor = 1.0` restores the baseline
+    /// exactly, so degrade/recover pairs round-trip bit-for-bit.
+    BandwidthDrift { link: LinkClass, factor: f64 },
+    /// Move `fraction` of `from_edge`'s current arrival weight to
+    /// `to_edge` (indices into the edge list, i.e. edge positions).
+    UserMobility { from_edge: usize, to_edge: usize, fraction: f64 },
+    /// Add (`add = true`) or evict a (service, tier) replica on a server,
+    /// visible to schedulers from the next decision frame on.
+    PlacementChange { server: usize, service: usize, tier: usize, add: bool },
+}
+
+impl EventKind {
+    /// Stable machine label, used as the JSON `type` tag.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::LoadBurst { .. } => "load_burst",
+            EventKind::ServerDown { .. } => "server_down",
+            EventKind::ServerUp { .. } => "server_up",
+            EventKind::BandwidthDrift { .. } => "bandwidth_drift",
+            EventKind::UserMobility { .. } => "user_mobility",
+            EventKind::PlacementChange { .. } => "placement_change",
+        }
+    }
+}
+
+/// One event at its virtual-time trigger point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScriptedEvent {
+    pub at_ms: f64,
+    pub kind: EventKind,
+}
+
+/// A named, time-ordered scenario script.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Script {
+    pub name: String,
+    pub events: Vec<ScriptedEvent>,
+}
+
+/// The built-in scenario library, in presentation order.
+pub const BUILTIN_NAMES: [&str; 4] =
+    ["flash-crowd", "edge-failover", "degraded-backhaul", "commuter-wave"];
+
+impl Script {
+    /// Build a script; events are sorted by trigger time (stable, so
+    /// same-timestamp events keep authoring order).
+    pub fn new(name: &str, events: Vec<ScriptedEvent>) -> Script {
+        let mut s = Script { name: name.to_string(), events };
+        s.events.sort_by(|a, b| a.at_ms.total_cmp(&b.at_ms));
+        s
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Structural validation against a world size. The engine also skips
+    /// out-of-range events defensively, but scripts loaded from files
+    /// should fail loudly instead.
+    pub fn validate(
+        &self,
+        num_servers: usize,
+        num_edges: usize,
+        num_services: usize,
+        num_tiers: usize,
+    ) -> Result<()> {
+        for (i, ev) in self.events.iter().enumerate() {
+            if !ev.at_ms.is_finite() || ev.at_ms < 0.0 {
+                bail!("event {i}: non-finite or negative trigger time {}", ev.at_ms);
+            }
+            match &ev.kind {
+                EventKind::LoadBurst { rate_multiplier, duration_ms } => {
+                    let bad = !rate_multiplier.is_finite()
+                        || *rate_multiplier <= 0.0
+                        || !duration_ms.is_finite()
+                        || *duration_ms < 0.0;
+                    if bad {
+                        bail!("event {i}: load_burst needs multiplier > 0 and duration >= 0");
+                    }
+                }
+                EventKind::ServerDown { server } | EventKind::ServerUp { server } => {
+                    if *server >= num_servers {
+                        bail!("event {i}: server {server} out of range (< {num_servers})");
+                    }
+                }
+                EventKind::BandwidthDrift { link, factor } => {
+                    if !factor.is_finite() || *factor <= 0.0 {
+                        bail!("event {i}: bandwidth_drift factor must be > 0");
+                    }
+                    if let LinkClass::Pair { a, b } = link {
+                        if *a >= num_servers || *b >= num_servers || a == b {
+                            bail!("event {i}: link pair ({a}, {b}) invalid");
+                        }
+                    }
+                }
+                EventKind::UserMobility { from_edge, to_edge, fraction } => {
+                    if *from_edge >= num_edges || *to_edge >= num_edges {
+                        bail!("event {i}: mobility edge out of range (< {num_edges})");
+                    }
+                    if from_edge == to_edge {
+                        bail!("event {i}: mobility from_edge == to_edge ({from_edge})");
+                    }
+                    if !(0.0..=1.0).contains(fraction) {
+                        bail!("event {i}: mobility fraction {fraction} not in [0, 1]");
+                    }
+                }
+                EventKind::PlacementChange { server, service, tier, .. } => {
+                    if *server >= num_servers || *service >= num_services || *tier >= num_tiers {
+                        bail!("event {i}: placement_change target out of range");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- built-in library -------------------------------------------------
+
+    /// Names of the built-in scenarios.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &BUILTIN_NAMES
+    }
+
+    /// Instantiate a named built-in scenario against a horizon and edge
+    /// count (event times scale with the horizon, targets with the edge
+    /// count — the same name works for the 3-edge test world and the
+    /// paper's 9-edge default).
+    pub fn builtin(name: &str, horizon_ms: f64, num_edges: usize) -> Option<Script> {
+        assert!(horizon_ms > 0.0 && num_edges > 0);
+        let h = horizon_ms;
+        let events = match name {
+            // A sudden ×8 arrival surge for ~30% of the run.
+            "flash-crowd" => vec![ScriptedEvent {
+                at_ms: 0.25 * h,
+                kind: EventKind::LoadBurst { rate_multiplier: 8.0, duration_ms: 0.30 * h },
+            }],
+            // The best-provisioned edge dies mid-run and comes back:
+            // its users re-home, capacity shrinks, then recovers.
+            // `paper_default` cycles classes Small/Medium/Large by index,
+            // so the last index ≡ 2 (mod 3) is the EdgeLarge victim; with
+            // fewer than three edges the last edge is the best available.
+            "edge-failover" => {
+                let victim = (0..num_edges)
+                    .rev()
+                    .find(|i| i % 3 == 2)
+                    .unwrap_or(num_edges - 1);
+                vec![
+                    ScriptedEvent {
+                        at_ms: 0.30 * h,
+                        kind: EventKind::ServerDown { server: victim },
+                    },
+                    ScriptedEvent {
+                        at_ms: 0.65 * h,
+                        kind: EventKind::ServerUp { server: victim },
+                    },
+                ]
+            }
+            // The edge↔cloud backhaul degrades 30× and later recovers —
+            // offloading to the cloud stops paying off in between.
+            "degraded-backhaul" => vec![
+                ScriptedEvent {
+                    at_ms: 0.30 * h,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeCloud, factor: 30.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 0.70 * h,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeCloud, factor: 1.0 },
+                },
+            ],
+            // Morning: users pour into "downtown" (edge 0) and load rises;
+            // evening: they spread back out evenly. The evening fractions
+            // 1/n, 1/(n-1), … redistribute edge 0's weight in equal parts.
+            "commuter-wave" => {
+                if num_edges < 2 {
+                    return None;
+                }
+                let n = num_edges;
+                let mut events = vec![ScriptedEvent {
+                    at_ms: 0.20 * h,
+                    kind: EventKind::LoadBurst { rate_multiplier: 2.0, duration_ms: 0.30 * h },
+                }];
+                for e in 1..n {
+                    events.push(ScriptedEvent {
+                        at_ms: 0.20 * h,
+                        kind: EventKind::UserMobility { from_edge: e, to_edge: 0, fraction: 0.7 },
+                    });
+                }
+                for e in 1..n {
+                    events.push(ScriptedEvent {
+                        at_ms: 0.60 * h,
+                        kind: EventKind::UserMobility {
+                            from_edge: 0,
+                            to_edge: e,
+                            fraction: 1.0 / (n - e + 1) as f64,
+                        },
+                    });
+                }
+                events
+            }
+            _ => return None,
+        };
+        Some(Script::new(name, events))
+    }
+
+    // -- JSON -------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "events",
+                Json::arr(self.events.iter().map(|ev| {
+                    let mut fields = vec![
+                        ("at_ms", Json::num(ev.at_ms)),
+                        ("type", Json::str(ev.kind.label())),
+                    ];
+                    match &ev.kind {
+                        EventKind::LoadBurst { rate_multiplier, duration_ms } => {
+                            fields.push(("rate_multiplier", Json::num(*rate_multiplier)));
+                            fields.push(("duration_ms", Json::num(*duration_ms)));
+                        }
+                        EventKind::ServerDown { server } | EventKind::ServerUp { server } => {
+                            fields.push(("server", Json::num(*server as f64)));
+                        }
+                        EventKind::BandwidthDrift { link, factor } => {
+                            fields.push(("link", link.to_json()));
+                            fields.push(("factor", Json::num(*factor)));
+                        }
+                        EventKind::UserMobility { from_edge, to_edge, fraction } => {
+                            fields.push(("from_edge", Json::num(*from_edge as f64)));
+                            fields.push(("to_edge", Json::num(*to_edge as f64)));
+                            fields.push(("fraction", Json::num(*fraction)));
+                        }
+                        EventKind::PlacementChange { server, service, tier, add } => {
+                            fields.push(("server", Json::num(*server as f64)));
+                            fields.push(("service", Json::num(*service as f64)));
+                            fields.push(("tier", Json::num(*tier as f64)));
+                            fields.push(("add", Json::Bool(*add)));
+                        }
+                    }
+                    Json::obj(fields)
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Script> {
+        let name = j.get("name").as_str().unwrap_or("unnamed").to_string();
+        let mut events = Vec::new();
+        for (i, ev) in j
+            .get("events")
+            .as_arr()
+            .context("script: events[]")?
+            .iter()
+            .enumerate()
+        {
+            let at_ms = ev.get("at_ms").as_f64().with_context(|| format!("event {i}: at_ms"))?;
+            let ty = ev.get("type").as_str().with_context(|| format!("event {i}: type"))?;
+            let kind = match ty {
+                "load_burst" => EventKind::LoadBurst {
+                    rate_multiplier: ev
+                        .get("rate_multiplier")
+                        .as_f64()
+                        .context("rate_multiplier")?,
+                    duration_ms: ev.get("duration_ms").as_f64().context("duration_ms")?,
+                },
+                "server_down" => EventKind::ServerDown {
+                    server: ev.get("server").as_usize().context("server")?,
+                },
+                "server_up" => EventKind::ServerUp {
+                    server: ev.get("server").as_usize().context("server")?,
+                },
+                "bandwidth_drift" => EventKind::BandwidthDrift {
+                    link: LinkClass::from_json(ev.get("link"))?,
+                    factor: ev.get("factor").as_f64().context("factor")?,
+                },
+                "user_mobility" => EventKind::UserMobility {
+                    from_edge: ev.get("from_edge").as_usize().context("from_edge")?,
+                    to_edge: ev.get("to_edge").as_usize().context("to_edge")?,
+                    fraction: ev.get("fraction").as_f64().context("fraction")?,
+                },
+                "placement_change" => EventKind::PlacementChange {
+                    server: ev.get("server").as_usize().context("server")?,
+                    service: ev.get("service").as_usize().context("service")?,
+                    tier: ev.get("tier").as_usize().context("tier")?,
+                    // Strict like every sibling field: a missing or
+                    // non-boolean `add` must not silently become an add.
+                    add: ev.get("add").as_bool().context("add (must be a JSON boolean)")?,
+                },
+                other => bail!("event {i}: unknown type {other:?}"),
+            };
+            events.push(ScriptedEvent { at_ms, kind });
+        }
+        Ok(Script::new(&name, events))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Script> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Script::from_json(&Json::parse(&text).with_context(|| format!("parsing {path}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Script {
+        Script::new(
+            "sample",
+            vec![
+                ScriptedEvent {
+                    at_ms: 9000.0,
+                    kind: EventKind::ServerUp { server: 2 },
+                },
+                ScriptedEvent {
+                    at_ms: 3000.0,
+                    kind: EventKind::ServerDown { server: 2 },
+                },
+                ScriptedEvent {
+                    at_ms: 1000.5,
+                    kind: EventKind::LoadBurst { rate_multiplier: 4.0, duration_ms: 2000.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 4000.0,
+                    kind: EventKind::BandwidthDrift {
+                        link: LinkClass::Pair { a: 0, b: 3 },
+                        factor: 2.5,
+                    },
+                },
+                ScriptedEvent {
+                    at_ms: 5000.0,
+                    kind: EventKind::UserMobility { from_edge: 1, to_edge: 0, fraction: 0.5 },
+                },
+                ScriptedEvent {
+                    at_ms: 6000.0,
+                    kind: EventKind::PlacementChange { server: 1, service: 2, tier: 3, add: true },
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn new_sorts_by_time() {
+        let s = sample();
+        for w in s.events.windows(2) {
+            assert!(w[0].at_ms <= w[1].at_ms);
+        }
+        assert_eq!(s.events[0].at_ms, 1000.5);
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let s = sample();
+        let text = s.to_json().pretty();
+        let s2 = Script::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        // Compact form too.
+        let s3 = Script::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(s, s3);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = std::env::temp_dir().join("edgeus_script_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.json").to_string_lossy().to_string();
+        let s = sample();
+        s.save(&path).unwrap();
+        assert_eq!(Script::load(&path).unwrap(), s);
+    }
+
+    #[test]
+    fn every_builtin_instantiates_and_validates() {
+        for name in Script::builtin_names() {
+            let s = Script::builtin(name, 120_000.0, 9).unwrap_or_else(|| panic!("{name}"));
+            assert!(!s.is_empty(), "{name} must script something");
+            assert_eq!(&s.name, name);
+            // Paper-default world: 10 servers, 9 edges.
+            s.validate(10, 9, 100, 10).unwrap_or_else(|e| panic!("{name}: {e}"));
+            // And the small test world.
+            let small = Script::builtin(name, 30_000.0, 3).unwrap();
+            small.validate(4, 3, 10, 4).unwrap();
+        }
+        assert!(Script::builtin("no-such-scenario", 1000.0, 3).is_none());
+    }
+
+    #[test]
+    fn commuter_wave_redistributes_evenly() {
+        // The evening fractions must spread edge 0's weight equally.
+        let n = 4usize;
+        let mut w = [3.1f64, 0.3, 0.3, 0.3];
+        for e in 1..n {
+            let f = 1.0 / (n - e + 1) as f64;
+            let moved = w[0] * f;
+            w[0] -= moved;
+            w[e] += moved;
+        }
+        for e in 1..n {
+            assert!((w[e] - w[0] - 0.3).abs() < 1e-9, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn edge_failover_victim_is_an_edge_large_index() {
+        // paper_default cycles Small/Medium/Large by index: i % 3 == 2 is
+        // EdgeLarge, whatever the edge count.
+        for n in [3usize, 4, 7, 9] {
+            let s = Script::builtin("edge-failover", 60_000.0, n).unwrap();
+            let down = s
+                .events
+                .iter()
+                .find_map(|e| match e.kind {
+                    EventKind::ServerDown { server } => Some(server),
+                    _ => None,
+                })
+                .unwrap();
+            assert!(down < n);
+            assert_eq!(down % 3, 2, "n={n}: victim {down} must be EdgeLarge");
+        }
+        // Degenerate small worlds fall back to the last edge.
+        let s = Script::builtin("edge-failover", 60_000.0, 2).unwrap();
+        assert!(s.events.iter().any(|e| e.kind == EventKind::ServerDown { server: 1 }));
+    }
+
+    #[test]
+    fn placement_change_requires_boolean_add() {
+        let missing = r#"{"name":"x","events":[{"at_ms":0,"type":"placement_change",
+            "server":0,"service":0,"tier":0}]}"#;
+        assert!(Script::from_json(&Json::parse(missing).unwrap()).is_err());
+        let stringly = r#"{"name":"x","events":[{"at_ms":0,"type":"placement_change",
+            "server":0,"service":0,"tier":0,"add":"false"}]}"#;
+        assert!(Script::from_json(&Json::parse(stringly).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_mobility() {
+        let s = Script::new(
+            "bad-mobility",
+            vec![ScriptedEvent {
+                at_ms: 0.0,
+                kind: EventKind::UserMobility { from_edge: 1, to_edge: 1, fraction: 0.5 },
+            }],
+        );
+        assert!(s.validate(4, 3, 10, 4).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let s = Script::new(
+            "bad",
+            vec![ScriptedEvent { at_ms: 0.0, kind: EventKind::ServerDown { server: 7 } }],
+        );
+        assert!(s.validate(4, 3, 10, 4).is_err());
+        let s = Script::new(
+            "bad2",
+            vec![ScriptedEvent {
+                at_ms: 0.0,
+                kind: EventKind::UserMobility { from_edge: 0, to_edge: 1, fraction: 1.5 },
+            }],
+        );
+        assert!(s.validate(4, 3, 10, 4).is_err());
+        let s = Script::new(
+            "bad3",
+            vec![ScriptedEvent {
+                at_ms: f64::NAN,
+                kind: EventKind::ServerUp { server: 0 },
+            }],
+        );
+        assert!(s.validate(4, 3, 10, 4).is_err());
+    }
+
+    #[test]
+    fn labels_are_stable_json_tags() {
+        let s = sample();
+        let j = s.to_json();
+        let types: Vec<&str> = j
+            .get("events")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("type").as_str().unwrap())
+            .collect();
+        assert_eq!(
+            types,
+            vec![
+                "load_burst",
+                "server_down",
+                "bandwidth_drift",
+                "user_mobility",
+                "placement_change",
+                "server_up"
+            ]
+        );
+    }
+}

@@ -1,0 +1,274 @@
+//! Parallel scenario sweep: fan one scenario out across seeds × policies
+//! on `std::thread` workers (via [`crate::benchkit::parallel_map`]),
+//! aggregate mean/CI summaries, and resample each run's per-frame time
+//! series onto a common grid for satisfaction-vs-time figures.
+//!
+//! Determinism: job k for (policy p, seed index s) always runs the DES
+//! with seed `base.seed + s`, results return in job order regardless of
+//! thread scheduling, and aggregation walks that order — so the output is
+//! independent of `threads`.
+
+use crate::benchkit::parallel_map;
+use crate::coordinator::scheduler_by_name;
+use crate::metrics::Series;
+use crate::sim::des::Des;
+use crate::sim::{DesConfig, DesReport};
+use crate::util::stats::Accumulator;
+
+/// One scenario sweep: `policies × num_seeds` DES runs.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Base DES configuration, including the scenario script (if any).
+    pub base: DesConfig,
+    pub policies: Vec<String>,
+    /// Seeds used: `base.seed`, `base.seed + 1`, …
+    pub num_seeds: usize,
+    pub threads: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            base: DesConfig::default(),
+            policies: vec!["gus".into(), "local-all".into()],
+            num_seeds: 8,
+            threads: crate::sim::montecarlo::default_threads(),
+        }
+    }
+}
+
+/// Aggregated outcome for one policy across all seeds.
+#[derive(Clone, Debug, Default)]
+pub struct PolicySweep {
+    pub policy: String,
+    pub satisfied_pct: Accumulator,
+    pub served_pct: Accumulator,
+    /// Scheduler drops + queue rejections, as % of generated.
+    pub drop_pct: Accumulator,
+    pub mean_completion_ms: Accumulator,
+    /// Raw per-seed reports, in seed order (for time-series work).
+    pub reports: Vec<DesReport>,
+}
+
+/// Run the sweep. Panics on an unknown policy name (callers validate via
+/// [`scheduler_by_name`] first — the CLI does).
+pub fn run_sweep(cfg: &SweepConfig) -> Vec<PolicySweep> {
+    assert!(cfg.num_seeds > 0, "sweep needs at least one seed");
+    // Policy-major job list → aggregation below is a straight walk.
+    let jobs: Vec<(usize, u64)> = (0..cfg.policies.len())
+        .flat_map(|pi| (0..cfg.num_seeds).map(move |s| (pi, cfg.base.seed + s as u64)))
+        .collect();
+    let reports = parallel_map(&jobs, cfg.threads, |_, &(pi, seed)| {
+        let policy =
+            scheduler_by_name(&cfg.policies[pi]).expect("unknown policy in scenario sweep");
+        let mut run_cfg = cfg.base.clone();
+        run_cfg.seed = seed;
+        Des::new(run_cfg, policy.as_ref()).run()
+    });
+    let mut out = Vec::with_capacity(cfg.policies.len());
+    let mut it = reports.into_iter();
+    for policy in &cfg.policies {
+        let mut agg = PolicySweep { policy: policy.clone(), ..Default::default() };
+        for _ in 0..cfg.num_seeds {
+            let r = it.next().expect("one report per job");
+            let n = r.generated.max(1) as f64;
+            agg.satisfied_pct.push(r.satisfied_pct());
+            agg.served_pct.push(100.0 * r.served as f64 / n);
+            agg.drop_pct.push(100.0 * (r.dropped + r.rejected_at_queue) as f64 / n);
+            if r.completion.count() > 0 {
+                agg.mean_completion_ms.push(r.completion.mean());
+            }
+            agg.reports.push(r);
+        }
+        out.push(agg);
+    }
+    out
+}
+
+/// Resample one report's per-frame series onto the regular grid
+/// `frame_ms, 2·frame_ms, …` up to `horizon_ms`: each grid point carries
+/// the satisfaction (% of requests *generated* in that window that ended
+/// satisfied, capped at 100 — completions lag arrivals by up to a
+/// deadline, so this is a windowed approximation). Windows with no
+/// arrivals carry the previous value forward; windows *before the first
+/// arrival* are NaN rather than a fabricated value, and the seed
+/// aggregation in [`timeline_series`] skips them.
+pub fn timeline_on_grid(report: &DesReport, frame_ms: f64, horizon_ms: f64) -> Vec<f64> {
+    assert!(frame_ms > 0.0 && horizon_ms > 0.0);
+    let n = (horizon_ms / frame_ms).ceil() as usize;
+    let mut out = Vec::with_capacity(n);
+    let (mut prev_gen, mut prev_sat) = (0u64, 0u64);
+    let (mut cur_gen, mut cur_sat) = (0u64, 0u64);
+    let mut fi = 0usize;
+    let mut last_val = f64::NAN;
+    for k in 0..n {
+        let t = (k as f64 + 1.0) * frame_ms;
+        while fi < report.frames.len() && report.frames[fi].t_ms <= t + 1e-9 {
+            cur_gen = report.frames[fi].generated;
+            cur_sat = report.frames[fi].satisfied;
+            fi += 1;
+        }
+        let dg = cur_gen.saturating_sub(prev_gen);
+        let ds = cur_sat.saturating_sub(prev_sat);
+        if dg > 0 {
+            last_val = (100.0 * ds as f64 / dg as f64).min(100.0);
+        }
+        out.push(last_val);
+        prev_gen = cur_gen;
+        prev_sat = cur_sat;
+    }
+    out
+}
+
+/// Build the satisfaction-vs-time [`Series`] (mean ± 95% CI over seeds,
+/// one column per policy) from a finished sweep.
+pub fn timeline_series(cfg: &SweepConfig, sweeps: &[PolicySweep]) -> Series {
+    let frame = cfg.base.frame_ms;
+    let horizon = cfg.base.horizon_ms;
+    let n = (horizon / frame).ceil() as usize;
+    let xs: Vec<f64> = (0..n).map(|k| (k as f64 + 1.0) * frame / 1e3).collect();
+    let mut series = Series::new("time (s)", "windowed satisfaction (%)", xs);
+    for sw in sweeps {
+        let mut accs: Vec<Accumulator> = (0..n).map(|_| Accumulator::new()).collect();
+        for report in &sw.reports {
+            for (k, v) in timeline_on_grid(report, frame, horizon).iter().enumerate() {
+                // NaN marks pre-first-arrival windows: no data, not 100%.
+                if v.is_finite() {
+                    accs[k].push(*v);
+                }
+            }
+        }
+        series.push_policy(
+            &sw.policy,
+            accs.iter().map(|a| a.mean()).collect(),
+            accs.iter().map(|a| a.ci95()).collect(),
+        );
+    }
+    series
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::service::CatalogParams;
+    use crate::model::topology::TopologyParams;
+    use crate::scenario::Script;
+    use crate::sim::des::FrameSample;
+    use crate::workload::{ScenarioParams, WorkloadParams};
+
+    fn quick_base() -> DesConfig {
+        DesConfig {
+            scenario: ScenarioParams {
+                topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
+                workload: WorkloadParams {
+                    deadline_mean_ms: 4000.0,
+                    deadline_std_ms: 1500.0,
+                    ..Default::default()
+                },
+            },
+            horizon_ms: 24_000.0,
+            arrival_rate_per_s: 4.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_shapes_and_policy_order() {
+        let cfg = SweepConfig {
+            base: quick_base(),
+            policies: vec!["gus".into(), "local-all".into()],
+            num_seeds: 3,
+            threads: 2,
+        };
+        let sweeps = run_sweep(&cfg);
+        assert_eq!(sweeps.len(), 2);
+        assert_eq!(sweeps[0].policy, "gus");
+        assert_eq!(sweeps[1].policy, "local-all");
+        for sw in &sweeps {
+            assert_eq!(sw.reports.len(), 3);
+            assert_eq!(sw.satisfied_pct.count(), 3);
+            for r in &sw.reports {
+                assert!(r.generated > 0);
+                assert!(!r.frames.is_empty(), "per-frame series must be recorded");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_thread_count_independent() {
+        let mut base = quick_base();
+        base.script = Script::builtin("flash-crowd", base.horizon_ms, 3);
+        let mk = |threads| SweepConfig {
+            base: base.clone(),
+            policies: vec!["gus".into()],
+            num_seeds: 4,
+            threads,
+        };
+        let a = run_sweep(&mk(1));
+        let b = run_sweep(&mk(8));
+        assert_eq!(a[0].satisfied_pct.mean(), b[0].satisfied_pct.mean());
+        for (x, y) in a[0].reports.iter().zip(b[0].reports.iter()) {
+            assert_eq!(x.to_json().dump(), y.to_json().dump(), "reports must be identical");
+        }
+    }
+
+    #[test]
+    fn timeline_grid_windows_cumulative_counters() {
+        let mut r = DesReport::default();
+        // Frames: 100 generated / 80 satisfied by t=3000; 200/120 by 6000.
+        r.frames.push(FrameSample {
+            t_ms: 3000.0,
+            generated: 100,
+            satisfied: 80,
+            ..Default::default()
+        });
+        r.frames.push(FrameSample {
+            t_ms: 6000.0,
+            generated: 200,
+            satisfied: 120,
+            ..Default::default()
+        });
+        let tl = timeline_on_grid(&r, 3000.0, 9000.0);
+        assert_eq!(tl.len(), 3);
+        assert!((tl[0] - 80.0).abs() < 1e-9);
+        assert!((tl[1] - 40.0).abs() < 1e-9);
+        // Empty window carries the previous value.
+        assert!((tl[2] - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeline_grid_marks_pre_arrival_windows_nan() {
+        let mut r = DesReport::default();
+        r.frames.push(FrameSample {
+            t_ms: 6000.0,
+            generated: 50,
+            satisfied: 25,
+            ..Default::default()
+        });
+        let tl = timeline_on_grid(&r, 3000.0, 9000.0);
+        assert!(tl[0].is_nan(), "no data yet must not read as 100%");
+        assert!((tl[1] - 50.0).abs() < 1e-9);
+        assert!((tl[2] - 50.0).abs() < 1e-9, "empty later window carries forward");
+    }
+
+    #[test]
+    fn timeline_series_has_one_column_per_policy() {
+        let cfg = SweepConfig {
+            base: quick_base(),
+            policies: vec!["gus".into(), "random".into()],
+            num_seeds: 2,
+            threads: 2,
+        };
+        let sweeps = run_sweep(&cfg);
+        let series = timeline_series(&cfg, &sweeps);
+        assert_eq!(series.policies.len(), 2);
+        let n = (cfg.base.horizon_ms / cfg.base.frame_ms).ceil() as usize;
+        assert_eq!(series.xs.len(), n);
+        for (_, ys, cis) in &series.policies {
+            assert_eq!(ys.len(), n);
+            assert_eq!(cis.len(), n);
+            assert!(ys.iter().all(|y| (0.0..=100.0).contains(y)), "{ys:?}");
+        }
+    }
+}

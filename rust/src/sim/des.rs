@@ -13,6 +13,13 @@
 //! exposes dynamics the one-shot study cannot: queue-length evolution,
 //! capacity recovery as work drains, and satisfaction vs offered load
 //! over a sustained horizon.
+//!
+//! With a [`crate::scenario::Script`] configured, a
+//! [`crate::scenario::ScenarioEngine`] additionally replays typed world
+//! events (outages, load bursts, bandwidth drift, user mobility,
+//! placement changes) at decision-frame boundaries, and the report grows
+//! a per-frame time series ([`FrameSample`]) of satisfaction, queue depth
+//! and capacity utilization.
 
 use crate::coordinator::{Scheduler, Schedule};
 use crate::model::request::Request;
@@ -39,6 +46,10 @@ pub struct DesConfig {
     pub arrival_rate_per_s: f64,
     /// Admission queue capacity per edge (paper: 4).
     pub queue_capacity: usize,
+    /// Optional scenario script: typed world events (outages, bursts,
+    /// bandwidth drift, mobility, placement changes) replayed by a
+    /// [`crate::scenario::ScenarioEngine`] at decision-frame boundaries.
+    pub script: Option<crate::scenario::Script>,
     pub seed: u64,
 }
 
@@ -50,9 +61,35 @@ impl Default for DesConfig {
             frame_ms: 3_000.0,
             arrival_rate_per_s: 2.0,
             queue_capacity: 4,
+            script: None,
             seed: 7,
         }
     }
+}
+
+/// One decision-boundary snapshot in [`DesReport::frames`]: cumulative
+/// counters as of the decision, plus instantaneous gauges. The scenario
+/// sweep resamples these into satisfaction-vs-time series.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrameSample {
+    /// Virtual time of the decision (ms).
+    pub t_ms: f64,
+    /// Cumulative counters at this boundary.
+    pub generated: u64,
+    pub served: u64,
+    pub satisfied: u64,
+    pub dropped: u64,
+    pub rejected: u64,
+    pub local: u64,
+    pub cloud: u64,
+    pub peer: u64,
+    /// Requests queued across all edges when the decision fired.
+    pub queue_depth: u64,
+    /// γ in service / total live γ, sampled after the decision committed
+    /// (can transiently exceed 1.0 right after an outage shrinks live γ).
+    pub capacity_utilization: f64,
+    /// Scenario events applied at this boundary.
+    pub events_applied: u64,
 }
 
 /// Aggregate outcome of one DES run.
@@ -75,6 +112,9 @@ pub struct DesReport {
     pub queue_len: Accumulator,
     /// Latency distribution for percentile reporting.
     pub latency_hist: Histogram,
+    /// Per-decision time series (one entry per decision boundary,
+    /// including queue-full-triggered ones).
+    pub frames: Vec<FrameSample>,
 }
 
 impl DesReport {
@@ -94,6 +134,50 @@ impl DesReport {
             100.0 * self.peer as f64 / n,
             100.0 * (self.dropped + self.rejected_at_queue) as f64 / n,
         ]
+    }
+
+    /// Serialize the full report (counters + per-frame series) as JSON.
+    /// Same seed + same config ⇒ byte-identical output — the determinism
+    /// tests compare these dumps directly.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        // NaN is not representable in JSON; empty accumulators report 0.
+        let num = |x: f64| Json::num(if x.is_finite() { x } else { 0.0 });
+        let count = |x: u64| Json::num(x as f64);
+        Json::obj(vec![
+            ("generated", count(self.generated)),
+            ("served", count(self.served)),
+            ("satisfied", count(self.satisfied)),
+            ("dropped", count(self.dropped)),
+            ("rejected_at_queue", count(self.rejected_at_queue)),
+            ("local", count(self.local)),
+            ("cloud", count(self.cloud)),
+            ("peer", count(self.peer)),
+            ("decisions", count(self.decisions)),
+            ("satisfied_pct", num(self.satisfied_pct())),
+            ("completion_mean_ms", num(self.completion.mean())),
+            ("queue_delay_mean_ms", num(self.queue_delay.mean())),
+            ("queue_len_mean", num(self.queue_len.mean())),
+            (
+                "frames",
+                Json::arr(self.frames.iter().map(|f| {
+                    Json::obj(vec![
+                        ("t_ms", num(f.t_ms)),
+                        ("generated", count(f.generated)),
+                        ("served", count(f.served)),
+                        ("satisfied", count(f.satisfied)),
+                        ("dropped", count(f.dropped)),
+                        ("rejected", count(f.rejected)),
+                        ("local", count(f.local)),
+                        ("cloud", count(f.cloud)),
+                        ("peer", count(f.peer)),
+                        ("queue_depth", count(f.queue_depth)),
+                        ("capacity_utilization", num(f.capacity_utilization)),
+                        ("events_applied", count(f.events_applied)),
+                    ])
+                })),
+            ),
+        ])
     }
 }
 
@@ -161,12 +245,22 @@ impl<'a> Des<'a> {
 
     pub fn run(&self) -> DesReport {
         let mut rng = Rng::new(self.cfg.seed);
-        let topology = Topology::paper_default(&self.cfg.scenario.topology, &mut rng);
+        let mut topology = Topology::paper_default(&self.cfg.scenario.topology, &mut rng);
         let catalog = ServiceCatalog::synthetic(&self.cfg.scenario.catalog, &mut rng);
         let classes: Vec<_> = topology.servers.iter().map(|s| s.class).collect();
-        let placement = Placement::random(&catalog, &classes, &mut rng);
+        let mut placement = Placement::random(&catalog, &classes, &mut rng);
         let edges = topology.edge_ids();
         let wl = &self.cfg.scenario.workload;
+        // Scenario engine (if a script is configured): replays world
+        // events at decision boundaries, modulates arrivals in between.
+        let mut engine = self.cfg.script.clone().map(|script| {
+            crate::scenario::ScenarioEngine::new(
+                script,
+                &topology,
+                catalog.num_services,
+                catalog.num_tiers,
+            )
+        });
 
         let mut report = DesReport {
             latency_hist: Histogram::exponential(10.0, 2.0, 14),
@@ -193,7 +287,13 @@ impl<'a> Des<'a> {
                 Event::Arrival => {
                     if now <= self.cfg.horizon_ms {
                         report.generated += 1;
-                        let edge_pos = rng.index(edges.len());
+                        // Covering edge: uniform without a scenario (the
+                        // seed behaviour, draw-for-draw); weighted over
+                        // live edges under mobility/outage scripts.
+                        let edge_pos = match &engine {
+                            Some(e) => e.pick_edge(&topology, &mut rng),
+                            None => rng.index(edges.len()),
+                        };
                         let pending = Pending {
                             service: ServiceId(rng.index(catalog.num_services)),
                             a_min: rng.normal_clamped(
@@ -220,13 +320,25 @@ impl<'a> Des<'a> {
                             // fills before the frame deadline.
                             push(&mut calendar, &mut seq, now, Event::Decision);
                         }
-                        // Next arrival (exponential gap).
-                        let next = now - gap * (1.0 - rng.f64()).ln();
+                        // Next arrival (exponential gap; `LoadBurst`
+                        // windows shrink the mean gap).
+                        let mult = engine
+                            .as_ref()
+                            .map(|e| e.arrival_multiplier(now))
+                            .unwrap_or(1.0);
+                        let next = now - (gap / mult) * (1.0 - rng.f64()).ln();
                         push(&mut calendar, &mut seq, next, Event::Arrival);
                     }
                 }
                 Event::Decision => {
                     report.decisions += 1;
+                    // Scenario events apply at frame boundaries, before
+                    // the drain — the scheduler sees the mutated world.
+                    let events_applied = match engine.as_mut() {
+                        Some(e) => e.advance(now, &mut topology, &mut placement),
+                        None => 0,
+                    };
+                    let queue_depth: u64 = queues.iter().map(|q| q.len() as u64).sum();
                     for q in &queues {
                         report.queue_len.push(q.len() as f64);
                     }
@@ -252,6 +364,40 @@ impl<'a> Des<'a> {
                             &mut push,
                         );
                     }
+                    // Per-frame sample, after the decision committed its
+                    // capacity so utilization reflects the new in-service
+                    // work.
+                    let live_gamma: f64 = topology
+                        .servers
+                        .iter()
+                        .filter(|s| s.up)
+                        .map(|s| s.gamma)
+                        .sum();
+                    let busy_live: f64 = topology
+                        .servers
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| s.up)
+                        .map(|(j, _)| busy[j])
+                        .sum();
+                    report.frames.push(FrameSample {
+                        t_ms: now,
+                        generated: report.generated,
+                        served: report.served,
+                        satisfied: report.satisfied,
+                        dropped: report.dropped,
+                        rejected: report.rejected_at_queue,
+                        local: report.local,
+                        cloud: report.cloud,
+                        peer: report.peer,
+                        queue_depth,
+                        capacity_utilization: if live_gamma > 0.0 {
+                            busy_live / live_gamma
+                        } else {
+                            0.0
+                        },
+                        events_applied,
+                    });
                     // Next frame while work can still arrive or drain.
                     if now < self.cfg.horizon_ms + 10.0 * self.cfg.frame_ms {
                         push(
@@ -490,6 +636,31 @@ mod tests {
         let r = Des::new(cfg, &gus).run();
         let last_third_floor = r.served as f64 / r.generated as f64;
         assert!(last_third_floor > 0.2, "throughput collapsed: {r:?}");
+    }
+
+    #[test]
+    fn frames_series_recorded_and_monotone() {
+        let gus = Gus::default();
+        let r = Des::new(quick_cfg(3.0), &gus).run();
+        assert!(!r.frames.is_empty(), "every decision must sample a frame");
+        for w in r.frames.windows(2) {
+            assert!(w[0].t_ms <= w[1].t_ms);
+            assert!(w[0].generated <= w[1].generated);
+            assert!(w[0].satisfied <= w[1].satisfied);
+            assert!(w[0].served <= w[1].served);
+        }
+        let last = r.frames.last().unwrap();
+        assert_eq!(last.generated, r.generated, "final frame sees every arrival");
+        assert_eq!(last.events_applied, 0, "no script, no events");
+    }
+
+    #[test]
+    fn report_json_dump_is_deterministic_and_parseable() {
+        let gus = Gus::default();
+        let a = Des::new(quick_cfg(3.0), &gus).run().to_json().dump();
+        let b = Des::new(quick_cfg(3.0), &gus).run().to_json().dump();
+        assert_eq!(a, b);
+        assert!(crate::util::json::Json::parse(&a).is_ok(), "dump must be valid JSON");
     }
 
     #[test]

@@ -79,6 +79,13 @@ impl Args {
         self.get(name)
             .map(|s| s.split(',').filter(|p| !p.is_empty()).map(|p| p.to_string()).collect())
     }
+
+    /// Comma-separated numeric list (`--rates 1,4,16`); entries that do
+    /// not parse are dropped silently, matching `get_f64`'s leniency.
+    pub fn get_f64_list(&self, name: &str) -> Option<Vec<f64>> {
+        self.get_list(name)
+            .map(|v| v.iter().filter_map(|s| s.parse().ok()).collect())
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +138,13 @@ mod tests {
             a.get_list("tiers").unwrap(),
             vec!["tiny".to_string(), "small".to_string(), "base".to_string()]
         );
+    }
+
+    #[test]
+    fn f64_list_parses_and_drops_garbage() {
+        let a = Args::parse(toks("--rates 1,4.5,x,16"), true);
+        assert_eq!(a.get_f64_list("rates").unwrap(), vec![1.0, 4.5, 16.0]);
+        assert!(a.get_f64_list("missing").is_none());
     }
 
     #[test]

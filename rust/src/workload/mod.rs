@@ -82,6 +82,33 @@ pub fn generate_requests(
         .collect()
 }
 
+/// Draw an index with probability proportional to `weights` (negative,
+/// NaN and infinite entries count as zero). Falls back to a uniform draw
+/// when no positive weight remains, so callers never lose a request to a
+/// fully-drained weight vector. Exactly one RNG draw either way — the
+/// scenario engine's `UserMobility` re-homing relies on that for
+/// reproducibility.
+pub fn pick_weighted(weights: &[f64], rng: &mut Rng) -> usize {
+    assert!(!weights.is_empty(), "pick_weighted needs at least one weight");
+    let live = |w: &f64| w.is_finite() && *w > 0.0;
+    let total: f64 = weights.iter().filter(|w| live(w)).sum();
+    if total <= 0.0 {
+        return rng.index(weights.len());
+    }
+    let mut r = rng.f64() * total;
+    let mut last = 0;
+    for (i, w) in weights.iter().enumerate() {
+        if live(w) {
+            last = i;
+            r -= *w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+    }
+    last // float round-off: land on the last live weight
+}
+
 /// Everything needed to instantiate one full numerical scenario.
 #[derive(Clone, Debug, Default)]
 pub struct ScenarioParams {
@@ -176,6 +203,31 @@ mod tests {
             assert_eq!(x.min_accuracy_pct, y.min_accuracy_pct);
             assert_eq!(x.covering, y.covering);
         }
+    }
+
+    #[test]
+    fn pick_weighted_respects_mass_and_masks() {
+        let mut rng = Rng::new(6);
+        let weights = [0.0, 3.0, 0.0, 1.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..4000 {
+            counts[pick_weighted(&weights, &mut rng)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[2], 0);
+        let ratio = counts[1] as f64 / counts[3] as f64;
+        assert!((2.0..4.5).contains(&ratio), "expected ~3:1, got {ratio}");
+    }
+
+    #[test]
+    fn pick_weighted_zero_mass_falls_back_to_uniform() {
+        let mut rng = Rng::new(7);
+        let weights = [0.0, 0.0, 0.0];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            seen[pick_weighted(&weights, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|s| *s), "fallback must cover every index");
     }
 
     #[test]

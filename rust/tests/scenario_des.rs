@@ -1,0 +1,342 @@
+//! Integration tests for the dynamic scenario engine: each built-in
+//! scenario runs end-to-end through the DES and GUS visibly reacts to
+//! its events; same-seed runs are byte-identical (with and without a
+//! script); scripts survive a JSON save → load → re-run round-trip.
+//!
+//! Phase comparisons use multi-seed means and guard bands (satisfaction
+//! is counted at completion time, which lags arrival by up to a
+//! deadline), with margins far below the injected effect sizes.
+
+use edgeus::coordinator::gus::Gus;
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::scenario::{EventKind, Script, ScriptedEvent};
+use edgeus::sim::{Des, DesConfig, DesReport};
+use edgeus::util::json::Json;
+use edgeus::workload::{ScenarioParams, WorkloadParams};
+
+/// 120 s world with a 10 × 4 catalog (small enough that every edge holds
+/// every replica — placement is not the variable under test).
+fn base_cfg(num_edge: usize, num_cloud: usize, rate: f64) -> DesConfig {
+    DesConfig {
+        scenario: ScenarioParams {
+            topology: TopologyParams { num_edge, num_cloud, ..Default::default() },
+            catalog: CatalogParams { num_services: 10, num_tiers: 4, ..Default::default() },
+            workload: WorkloadParams {
+                deadline_mean_ms: 4000.0,
+                deadline_std_ms: 1000.0,
+                ..Default::default()
+            },
+        },
+        horizon_ms: 120_000.0,
+        arrival_rate_per_s: rate,
+        ..Default::default()
+    }
+}
+
+fn run_gus(cfg: DesConfig) -> DesReport {
+    let gus = Gus::default();
+    Des::new(cfg, &gus).run()
+}
+
+/// Cumulative (generated, satisfied, served, cloud, peer) at the last
+/// decision boundary at or before `t_ms`.
+fn cum_at(r: &DesReport, t_ms: f64) -> (u64, u64, u64, u64, u64) {
+    let mut out = (0, 0, 0, 0, 0);
+    for f in &r.frames {
+        if f.t_ms <= t_ms {
+            out = (f.generated, f.satisfied, f.served, f.cloud, f.peer);
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Windowed satisfaction: % of requests generated in `[lo, hi)` that
+/// ended satisfied (approximate — completions lag).
+fn phase_satisfaction(r: &DesReport, lo_ms: f64, hi_ms: f64) -> f64 {
+    let a = cum_at(r, lo_ms);
+    let b = cum_at(r, hi_ms);
+    if b.0 <= a.0 {
+        return 100.0;
+    }
+    100.0 * (b.1 - a.1) as f64 / (b.0 - a.0) as f64
+}
+
+/// Share (%) of requests *served* in `[lo, hi)` that went to the cloud.
+fn phase_cloud_share(r: &DesReport, lo_ms: f64, hi_ms: f64) -> f64 {
+    let a = cum_at(r, lo_ms);
+    let b = cum_at(r, hi_ms);
+    let served = b.2.saturating_sub(a.2);
+    if served == 0 {
+        return 0.0;
+    }
+    100.0 * (b.3 - a.3) as f64 / served as f64
+}
+
+/// Share (%) of requests served in `[lo, hi)` that went to a peer edge.
+fn phase_peer_share(r: &DesReport, lo_ms: f64, hi_ms: f64) -> f64 {
+    let a = cum_at(r, lo_ms);
+    let b = cum_at(r, hi_ms);
+    let served = b.2.saturating_sub(a.2);
+    if served == 0 {
+        return 0.0;
+    }
+    100.0 * (b.4 - a.4) as f64 / served as f64
+}
+
+/// One GUS report per seed in {7, 8, 9}.
+fn seed_reports(cfg: &DesConfig) -> Vec<DesReport> {
+    [7u64, 8, 9]
+        .iter()
+        .map(|&seed| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            run_gus(c)
+        })
+        .collect()
+}
+
+/// Mean of `f` over a set of per-seed reports.
+fn mean_over(reports: &[DesReport], f: impl Fn(&DesReport) -> f64) -> f64 {
+    reports.iter().map(f).sum::<f64>() / reports.len() as f64
+}
+
+// ------------------------------------------------------- built-in scenarios
+
+#[test]
+fn every_builtin_conserves_requests_and_records_frames() {
+    for name in Script::builtin_names() {
+        let mut cfg = base_cfg(3, 1, 4.0);
+        cfg.horizon_ms = 60_000.0;
+        cfg.script = Some(Script::builtin(name, cfg.horizon_ms, 3).unwrap());
+        let r = run_gus(cfg);
+        assert!(r.generated > 100, "{name}: expected a real workload");
+        assert_eq!(
+            r.generated,
+            r.served + r.dropped + r.rejected_at_queue,
+            "{name}: conservation violated: {r:?}"
+        );
+        assert_eq!(r.served, r.local + r.cloud + r.peer, "{name}");
+        assert!(r.satisfied <= r.served, "{name}");
+        assert!(!r.frames.is_empty(), "{name}: frame series missing");
+        let applied: u64 = r.frames.iter().map(|f| f.events_applied).sum();
+        assert!(applied > 0, "{name}: no scenario event ever applied");
+    }
+}
+
+#[test]
+fn flash_crowd_burst_craters_then_recovers_satisfaction() {
+    // No cloud absorber: 3 edges sustain ~7 req/s; the ×8 burst (32/s in
+    // [30 s, 66 s)) must overwhelm them, and calm must return after.
+    let calm = base_cfg(3, 0, 4.0);
+    let mut crowd = calm.clone();
+    crowd.script = Some(Script::builtin("flash-crowd", crowd.horizon_ms, 3).unwrap());
+    let crowd_runs = seed_reports(&crowd);
+
+    let before = mean_over(&crowd_runs, |r| phase_satisfaction(r, 0.0, 30_000.0));
+    let during = mean_over(&crowd_runs, |r| phase_satisfaction(r, 33_000.0, 66_000.0));
+    let after = mean_over(&crowd_runs, |r| phase_satisfaction(r, 75_000.0, 120_000.0));
+    assert!(
+        during < before - 15.0,
+        "burst must crater satisfaction: before {before:.1}% vs during {during:.1}%"
+    );
+    assert!(
+        after > during + 15.0,
+        "satisfaction must recover after the burst: during {during:.1}% vs after {after:.1}%"
+    );
+
+    let with = mean_over(&crowd_runs, |r| r.satisfied_pct());
+    let without = mean_over(&seed_reports(&calm), |r| r.satisfied_pct());
+    assert!(
+        with < without - 2.0,
+        "overall: with burst {with:.1}% vs calm {without:.1}%"
+    );
+}
+
+#[test]
+fn edge_failover_satisfaction_dips_then_recovers_after_server_up() {
+    // The builtin downs the best-provisioned edge (index 2, EdgeLarge)
+    // over [36 s, 78 s). Without a cloud the remaining γ cannot carry
+    // 5 req/s, so satisfaction dips, then recovers after ServerUp.
+    let steady = base_cfg(3, 0, 5.0);
+    let mut failover = steady.clone();
+    failover.script = Some(Script::builtin("edge-failover", failover.horizon_ms, 3).unwrap());
+    let runs = seed_reports(&failover);
+
+    let before = mean_over(&runs, |r| phase_satisfaction(r, 0.0, 36_000.0));
+    let during = mean_over(&runs, |r| phase_satisfaction(r, 45_000.0, 78_000.0));
+    let after = mean_over(&runs, |r| phase_satisfaction(r, 87_000.0, 120_000.0));
+    assert!(
+        during < before - 8.0,
+        "outage must hurt: before {before:.1}% vs during {during:.1}%"
+    );
+    assert!(
+        after > during + 8.0,
+        "GUS must recover after ServerUp: during {during:.1}% vs after {after:.1}%"
+    );
+
+    let with = mean_over(&runs, |r| r.satisfied_pct());
+    let without = mean_over(&seed_reports(&steady), |r| r.satisfied_pct());
+    assert!(with < without, "outage run cannot beat the steady run");
+}
+
+#[test]
+fn degraded_backhaul_shifts_gus_away_from_the_cloud() {
+    // Backhaul ×30 over [36 s, 84 s): offloading to the (fast) cloud
+    // stops meeting deadlines profitably, so GUS re-routes to local/peer
+    // serving — and goes back once the drift recovers.
+    let healthy = base_cfg(3, 1, 4.0);
+    let mut degraded = healthy.clone();
+    degraded.script =
+        Some(Script::builtin("degraded-backhaul", degraded.horizon_ms, 3).unwrap());
+    let degraded_runs = seed_reports(&degraded);
+    let healthy_runs = seed_reports(&healthy);
+
+    let window = |r: &DesReport| phase_cloud_share(r, 40_000.0, 84_000.0);
+    let with = mean_over(&degraded_runs, window);
+    let without = mean_over(&healthy_runs, window);
+    assert!(
+        with < without - 25.0,
+        "cloud share in the degraded window: with {with:.1}% vs without {without:.1}%"
+    );
+    // After the factor-1.0 recovery event the cloud becomes attractive
+    // again.
+    let late = mean_over(&degraded_runs, |r| phase_cloud_share(r, 90_000.0, 120_000.0));
+    assert!(
+        late > with + 20.0,
+        "cloud share must rebound after recovery: degraded {with:.1}% vs late {late:.1}%"
+    );
+    // GUS adapts rather than collapses: satisfaction stays in the same
+    // band as the healthy run.
+    let sat_with = mean_over(&degraded_runs, |r| r.satisfied_pct());
+    let sat_without = mean_over(&healthy_runs, |r| r.satisfied_pct());
+    assert!(
+        sat_with > sat_without - 15.0,
+        "adaptation should bound the damage: {sat_with:.1}% vs {sat_without:.1}%"
+    );
+}
+
+#[test]
+fn commuter_wave_concentration_forces_offloading_then_subsides() {
+    // Morning (24 s): 70% of every outer edge's users re-home to edge 0
+    // (EdgeSmall) while load doubles; evening (72 s) spreads them back.
+    let uniform = base_cfg(4, 0, 5.0);
+    let mut wave = uniform.clone();
+    wave.script = Some(Script::builtin("commuter-wave", wave.horizon_ms, 4).unwrap());
+    let wave_runs = seed_reports(&wave);
+
+    // During the wave the hot edge cannot serve its crowd locally: the
+    // peer-offload share of completions must rise sharply vs uniform.
+    let window = |r: &DesReport| phase_peer_share(r, 27_000.0, 60_000.0);
+    let with = mean_over(&wave_runs, window);
+    let without = mean_over(&seed_reports(&uniform), window);
+    assert!(
+        with > without + 10.0,
+        "peer share during the wave: with {with:.1}% vs uniform {without:.1}%"
+    );
+    // And the system recovers after the evening redistribution.
+    let during = mean_over(&wave_runs, |r| phase_satisfaction(r, 27_000.0, 60_000.0));
+    let after = mean_over(&wave_runs, |r| phase_satisfaction(r, 81_000.0, 120_000.0));
+    assert!(
+        after > during + 5.0,
+        "evening must relieve the hot edge: during {during:.1}% vs after {after:.1}%"
+    );
+}
+
+#[test]
+fn custom_script_cloud_outage_stops_cloud_offloads_until_server_up() {
+    // Scripts are not limited to the built-ins: down the *cloud* (server
+    // index 3) over [30 s, 90 s). Cloud completions must stop inside the
+    // window (10 s guard for in-flight work) and resume after.
+    let mut cfg = base_cfg(3, 1, 3.0);
+    cfg.script = Some(Script::new(
+        "cloud-outage",
+        vec![
+            ScriptedEvent { at_ms: 30_000.0, kind: EventKind::ServerDown { server: 3 } },
+            ScriptedEvent { at_ms: 90_000.0, kind: EventKind::ServerUp { server: 3 } },
+        ],
+    ));
+    for seed in [7u64, 11] {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let r = run_gus(c);
+        let early = cum_at(&r, 30_000.0);
+        let mid_a = cum_at(&r, 40_000.0);
+        let mid_b = cum_at(&r, 90_000.0);
+        let end = cum_at(&r, 121_000.0);
+        assert!(early.3 > 0, "seed {seed}: GUS should use the healthy cloud");
+        assert_eq!(
+            mid_b.3, mid_a.3,
+            "seed {seed}: no cloud completions during the outage window"
+        );
+        assert!(
+            end.3 > mid_b.3,
+            "seed {seed}: cloud offloading must resume after ServerUp"
+        );
+        assert_eq!(r.generated, r.served + r.dropped + r.rejected_at_queue);
+    }
+}
+
+// --------------------------------------------------- determinism/round-trip
+
+#[test]
+fn same_seed_runs_are_byte_identical_with_and_without_script() {
+    for script in [
+        None,
+        Some(Script::builtin("flash-crowd", 60_000.0, 3).unwrap()),
+        Some(Script::builtin("edge-failover", 60_000.0, 3).unwrap()),
+    ] {
+        let mut cfg = base_cfg(3, 1, 4.0);
+        cfg.horizon_ms = 60_000.0;
+        cfg.script = script;
+        let a = run_gus(cfg.clone()).to_json().dump();
+        let b = run_gus(cfg.clone()).to_json().dump();
+        assert_eq!(a, b, "same seed + same config must be byte-identical");
+        assert!(Json::parse(&a).is_ok(), "report dump must stay valid JSON");
+    }
+}
+
+#[test]
+fn script_survives_json_round_trip_and_reruns_identically() {
+    let script = Script::builtin("commuter-wave", 60_000.0, 3).unwrap();
+    let text = script.to_json().pretty();
+    let reloaded = Script::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(script, reloaded, "structural round-trip");
+
+    let mut cfg = base_cfg(3, 1, 5.0);
+    cfg.horizon_ms = 60_000.0;
+    cfg.script = Some(script);
+    let a = run_gus(cfg.clone()).to_json().dump();
+    cfg.script = Some(reloaded);
+    let b = run_gus(cfg).to_json().dump();
+    assert_eq!(a, b, "a reloaded script must reproduce the run byte-for-byte");
+}
+
+#[test]
+fn script_file_round_trip_through_disk() {
+    let dir = std::env::temp_dir().join("edgeus_scenario_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("failover.json").to_string_lossy().to_string();
+    let script = Script::builtin("edge-failover", 90_000.0, 3).unwrap();
+    script.save(&path).unwrap();
+    let loaded = Script::load(&path).unwrap();
+    assert_eq!(script, loaded);
+    loaded.validate(4, 3, 10, 4).unwrap();
+}
+
+#[test]
+fn seeds_differ_under_a_script() {
+    let mut cfg = base_cfg(3, 1, 4.0);
+    cfg.horizon_ms = 60_000.0;
+    cfg.script = Some(Script::builtin("flash-crowd", cfg.horizon_ms, 3).unwrap());
+    let a = run_gus(cfg.clone());
+    cfg.seed = 99;
+    let b = run_gus(cfg);
+    assert_ne!(
+        (a.generated, a.satisfied),
+        (b.generated, b.satisfied),
+        "different seeds must explore different arrival processes"
+    );
+}
