@@ -13,8 +13,7 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(200);
-    let mut cfg = NumericalConfig::default();
-    cfg.runs = runs;
+    let cfg = NumericalConfig { runs, ..Default::default() };
 
     let mut results = Vec::new();
     for figure in [

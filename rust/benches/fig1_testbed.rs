@@ -16,8 +16,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(50.0);
 
-    let mut exp = TestbedExperiment::default();
-    exp.loads = loads;
+    let mut exp = TestbedExperiment { loads, ..Default::default() };
     exp.base.time_scale = scale;
     if !std::path::Path::new(&format!("{}/manifest.json", exp.base.artifacts_dir)).exists() {
         eprintln!(

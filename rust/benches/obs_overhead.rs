@@ -1,0 +1,78 @@
+//! Bench: observability recorder overhead on the DES hot loop.
+//!
+//! Three configurations over the same workload and seed:
+//!   * `recorder_absent`       — no recorder attached (today's default)
+//!   * `recorder_disabled_64k` — a disabled recorder attached (every
+//!                                instrumentation site pays its one branch)
+//!   * `recorder_enabled_64k`  — full tracing into a 64k-event ring
+//!
+//! The budget (DESIGN.md §Perf): disabled-vs-absent must stay within 5%.
+//! Scale knobs:
+//!   EDGEUS_BENCH_HORIZON_S virtual horizon per run (default 120)
+//!   EDGEUS_BENCH_RATE      offered load, req/s (default 32)
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::coordinator::scheduler_by_name;
+use edgeus::obs::Recorder;
+use edgeus::sim::{Des, DesConfig};
+use std::sync::Arc;
+
+fn main() {
+    let horizon_s: f64 = std::env::var("EDGEUS_BENCH_HORIZON_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120.0);
+    let rate: f64 = std::env::var("EDGEUS_BENCH_RATE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32.0);
+
+    let cfg = DesConfig {
+        horizon_ms: horizon_s * 1e3,
+        arrival_rate_per_s: rate,
+        ..Default::default()
+    };
+    let scheduler = scheduler_by_name("gus").expect("gus scheduler");
+    let items = horizon_s * rate; // offered requests per iteration
+
+    let bencher = Bencher::new(1, 5).with_items(items);
+    let absent = {
+        let cfg = cfg.clone();
+        bencher.run("recorder_absent", || {
+            Des::new(cfg.clone(), scheduler.as_ref()).run().served
+        })
+    };
+    let disabled = {
+        let cfg = cfg.clone();
+        bencher.run("recorder_disabled_64k", || {
+            Des::new(cfg.clone(), scheduler.as_ref())
+                .with_recorder(Arc::new(Recorder::disabled()))
+                .run()
+                .served
+        })
+    };
+    let enabled = {
+        let cfg = cfg.clone();
+        bencher.run("recorder_enabled_64k", || {
+            Des::new(cfg.clone(), scheduler.as_ref())
+                .with_recorder(Arc::new(Recorder::enabled(1 << 16)))
+                .run()
+                .served
+        })
+    };
+
+    println!("{}", report("DES observability overhead (items = offered requests)", &[
+        absent.clone(),
+        disabled.clone(),
+        enabled.clone(),
+    ]));
+
+    let pct = |base: f64, v: f64| if base > 0.0 { 100.0 * (v - base) / base } else { 0.0 };
+    let off_overhead = pct(absent.mean_ms, disabled.mean_ms);
+    let on_overhead = pct(absent.mean_ms, enabled.mean_ms);
+    println!("recorder off  vs absent: {off_overhead:+.2}% mean wall (budget ≤ +5%)");
+    println!("recorder on   vs absent: {on_overhead:+.2}% mean wall");
+    if off_overhead > 5.0 {
+        println!("WARN: disabled-recorder overhead exceeds the 5% budget");
+    }
+}

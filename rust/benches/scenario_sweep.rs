@@ -21,9 +21,11 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(60.0);
 
-    let mut base = DesConfig::default();
-    base.horizon_ms = horizon_s * 1e3;
-    base.arrival_rate_per_s = 8.0;
+    let mut base = DesConfig {
+        horizon_ms: horizon_s * 1e3,
+        arrival_rate_per_s: 8.0,
+        ..Default::default()
+    };
     let num_edges = base.scenario.topology.num_edge;
     let policies = vec!["gus".to_string(), "local-all".to_string()];
 

@@ -1,0 +1,262 @@
+//! Post-hoc schedule explanation: classify every dropped request of a
+//! finished [`Schedule`] into the shared [`DropReason`] taxonomy and
+//! count the candidates each request had. Scheduler-agnostic — it only
+//! looks at the instance and the schedule, never at policy internals —
+//! so the DES, the serving leader, and future policies all get
+//! explainability for free.
+//!
+//! Classification is by elimination, using **STRICT** capacity
+//! semantics: residual γ/η are recomputed by raw subtraction of the
+//! served assignments (never `CapacityTracker`, whose debug assertions
+//! reject the legal overdraws of the Happy-* relaxations). For relaxed
+//! policies the capacity-vs-policy split is therefore a best-effort
+//! STRICT reading of the same frame; the deadline / server-down
+//! classes are exact for every policy.
+
+use crate::coordinator::us::{qos_satisfied, Schedule};
+use crate::model::instance::Candidate;
+use crate::model::ProblemInstance;
+use crate::obs::DropReason;
+
+/// Where one request ended up, with enough detail to label a trace.
+#[derive(Clone, Copy, Debug)]
+pub enum Outcome {
+    Served { server: usize, tier: usize, us: f64, offloaded: bool },
+    Dropped(DropReason),
+}
+
+/// Per-request record of one decision frame.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestOutcome {
+    /// Slot index in the schedule / instance.
+    pub request: usize,
+    /// Placement-feasible candidates enumerated for this request.
+    pub considered: usize,
+    /// Of those, candidates passing QoS (2b)/(2c) on a reachable server.
+    pub qos_feasible: usize,
+    pub outcome: Outcome,
+}
+
+/// Aggregate explanation of one frame's schedule.
+#[derive(Clone, Debug, Default)]
+pub struct DecisionExplain {
+    pub outcomes: Vec<RequestOutcome>,
+    /// Total candidates enumerated across all requests this frame.
+    pub candidates_considered: u64,
+    drop_reasons: [u64; DropReason::COUNT],
+}
+
+impl DecisionExplain {
+    pub fn drops(&self, reason: DropReason) -> u64 {
+        self.drop_reasons[reason.index()]
+    }
+
+    pub fn total_drops(&self) -> u64 {
+        self.drop_reasons.iter().sum()
+    }
+}
+
+/// Explain a finished schedule against its instance.
+///
+/// Dropped requests classify by elimination: no live reachable
+/// candidate → [`DropReason::ServerDown`]; none QoS-feasible →
+/// [`DropReason::DeadlineInfeasible`]; none fits the residual capacity
+/// left by the served assignments → [`DropReason::CapacityExhausted`];
+/// otherwise the policy itself declined → [`DropReason::Policy`].
+pub fn explain_schedule(inst: &ProblemInstance, schedule: &Schedule) -> DecisionExplain {
+    debug_assert_eq!(schedule.slots.len(), inst.num_requests());
+    // Residual γ/η with every served assignment committed. Raw
+    // subtraction, not CapacityTracker: relaxed policies may legally
+    // overdraw, and a negative residual simply means nothing else fits.
+    let mut gamma: Vec<f64> = inst
+        .topology
+        .servers
+        .iter()
+        .map(|s| if s.up { s.gamma } else { 0.0 })
+        .collect();
+    let mut eta: Vec<f64> = inst
+        .topology
+        .servers
+        .iter()
+        .map(|s| if s.up { s.eta } else { 0.0 })
+        .collect();
+    for (i, slot) in schedule.slots.iter().enumerate() {
+        if let Some(a) = slot {
+            gamma[a.candidate.server.0] -= a.candidate.comp_cost;
+            if a.candidate.offloaded {
+                eta[inst.requests[i].covering.0] -= a.candidate.comm_cost;
+            }
+        }
+    }
+
+    let mut out = DecisionExplain::default();
+    for (i, slot) in schedule.slots.iter().enumerate() {
+        let req = &inst.requests[i];
+        let covering_up = inst.topology.servers[req.covering.0].up;
+        let cands = inst.candidates(i);
+        let considered = cands.len();
+        // Offloading rides the covering edge's uplink; with that edge
+        // down, remote candidates are physically unreachable.
+        let reachable: Vec<Candidate> = cands
+            .iter()
+            .copied()
+            .filter(|c| !c.offloaded || covering_up)
+            .collect();
+        let qos_ok: Vec<Candidate> = reachable
+            .iter()
+            .copied()
+            .filter(|c| qos_satisfied(req, c))
+            .collect();
+        let outcome = match slot {
+            Some(a) => Outcome::Served {
+                server: a.candidate.server.0,
+                tier: a.candidate.tier.0,
+                us: a.us,
+                offloaded: a.candidate.offloaded,
+            },
+            None => {
+                let reason = if reachable.is_empty() {
+                    DropReason::ServerDown
+                } else if qos_ok.is_empty() {
+                    DropReason::DeadlineInfeasible
+                } else if !qos_ok
+                    .iter()
+                    .any(|c| fits_residual(c, req.covering.0, &gamma, &eta))
+                {
+                    DropReason::CapacityExhausted
+                } else {
+                    DropReason::Policy
+                };
+                out.drop_reasons[reason.index()] += 1;
+                Outcome::Dropped(reason)
+            }
+        };
+        out.candidates_considered += considered as u64;
+        out.outcomes.push(RequestOutcome {
+            request: i,
+            considered,
+            qos_feasible: qos_ok.len(),
+            outcome,
+        });
+    }
+    out
+}
+
+fn fits_residual(c: &Candidate, covering: usize, gamma: &[f64], eta: &[f64]) -> bool {
+    gamma[c.server.0] + 1e-9 >= c.comp_cost
+        && (!c.offloaded || eta[covering] + 1e-9 >= c.comm_cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::us::Assignment;
+    use crate::model::request::RequestId;
+    use crate::model::server::{Server, ServerClass};
+    use crate::model::service::TierProfile;
+    use crate::model::{Placement, Request, ServiceCatalog, Topology};
+
+    /// One service, one tier, fixed costs: comp 1, comm 1, proc 100 ms,
+    /// accuracy 90% — so every classification threshold is exact.
+    fn catalog1() -> ServiceCatalog {
+        ServiceCatalog::from_profiles(vec![vec![TierProfile {
+            accuracy_pct: 90.0,
+            proc_ms: [100.0; ServerClass::COUNT],
+            comp_cost: 1.0,
+            comm_cost: 1.0,
+            model_bytes: 0,
+        }]])
+    }
+
+    /// Two edge servers (ids 0, 1), 1 ms apart, full placement.
+    fn inst_with(gamma: f64, ups: [bool; 2], requests: Vec<Request>) -> ProblemInstance {
+        let topology = Topology::explicit(
+            vec![
+                Server::new(0, ServerClass::EdgeMedium)
+                    .with_capacities(gamma, 5.0)
+                    .with_up(ups[0]),
+                Server::new(1, ServerClass::EdgeLarge)
+                    .with_capacities(gamma, 5.0)
+                    .with_up(ups[1]),
+            ],
+            vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+        );
+        let catalog = catalog1();
+        let placement = Placement::full(&catalog, 2);
+        ProblemInstance::new(topology, catalog, placement, requests)
+            .with_normalization(100.0, 12_000.0)
+    }
+
+    fn local_assignment(inst: &ProblemInstance, i: usize) -> Assignment {
+        let cand = inst
+            .candidates(i)
+            .into_iter()
+            .find(|c| !c.offloaded)
+            .expect("local candidate");
+        Assignment { request: RequestId(i), candidate: cand, us: 0.5 }
+    }
+
+    #[test]
+    fn served_requests_report_their_assignment() {
+        let inst = inst_with(4.0, [true, true], vec![Request::new(0, 0, 0)]);
+        let mut schedule = Schedule::empty(1);
+        schedule.slots[0] = Some(local_assignment(&inst, 0));
+        let ex = explain_schedule(&inst, &schedule);
+        assert_eq!(ex.total_drops(), 0);
+        assert_eq!(ex.outcomes.len(), 1);
+        // full placement on 2 servers × 1 tier = 2 candidates
+        assert_eq!(ex.candidates_considered, 2);
+        match ex.outcomes[0].outcome {
+            Outcome::Served { server, offloaded, .. } => {
+                assert_eq!(server, 0);
+                assert!(!offloaded);
+            }
+            other => panic!("expected Served, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn impossible_deadline_classifies_as_deadline_infeasible() {
+        let req = Request::new(0, 0, 0).with_qos(0.0, 0.0); // proc is 100 ms
+        let inst = inst_with(4.0, [true, true], vec![req]);
+        let ex = explain_schedule(&inst, &Schedule::empty(1));
+        assert_eq!(ex.drops(DropReason::DeadlineInfeasible), 1);
+        assert_eq!(ex.outcomes[0].qos_feasible, 0);
+        assert_eq!(ex.outcomes[0].considered, 2);
+    }
+
+    #[test]
+    fn down_covering_edge_classifies_as_server_down() {
+        // Covering edge 0 is down: its local replicas are gone from the
+        // candidate set, and server 1 is unreachable without the uplink.
+        let req = Request::new(0, 0, 0).with_qos(0.0, 100_000.0);
+        let inst = inst_with(4.0, [false, true], vec![req]);
+        let ex = explain_schedule(&inst, &Schedule::empty(1));
+        assert_eq!(ex.drops(DropReason::ServerDown), 1);
+    }
+
+    #[test]
+    fn spent_capacity_classifies_as_capacity_exhausted() {
+        // γ = 1 per server, server 1 down → only the local slot exists;
+        // request 0 takes it, request 1 finds residual γ = 0.
+        let reqs = vec![
+            Request::new(0, 0, 0).with_qos(0.0, 100_000.0),
+            Request::new(1, 0, 0).with_qos(0.0, 100_000.0),
+        ];
+        let inst = inst_with(1.0, [true, false], reqs);
+        let mut schedule = Schedule::empty(2);
+        schedule.slots[0] = Some(local_assignment(&inst, 0));
+        let ex = explain_schedule(&inst, &schedule);
+        assert_eq!(ex.drops(DropReason::CapacityExhausted), 1);
+        assert_eq!(ex.total_drops(), 1);
+    }
+
+    #[test]
+    fn unforced_drop_classifies_as_policy() {
+        // Plenty of γ left: a feasible candidate fit, the policy passed.
+        let req = Request::new(0, 0, 0).with_qos(0.0, 100_000.0);
+        let inst = inst_with(4.0, [true, true], vec![req]);
+        let ex = explain_schedule(&inst, &Schedule::empty(1));
+        assert_eq!(ex.drops(DropReason::Policy), 1);
+    }
+}

@@ -6,9 +6,12 @@
 //! * [`gus`] — the proposed greedy GUS algorithm (Algorithm 1);
 //! * [`baselines`] — the five comparison heuristics from §IV;
 //! * [`ilp`] — an exact branch-and-bound solver standing in for CPLEX
-//!   (see DESIGN.md §Substitutions).
+//!   (see DESIGN.md §Substitutions);
+//! * [`explain`] — post-hoc schedule explanation: per-request drop
+//!   reasons and candidate counts for any policy's output.
 
 pub mod baselines;
+pub mod explain;
 pub mod gus;
 pub mod ilp;
 pub mod us;

@@ -325,14 +325,16 @@ mod tests {
 
     #[test]
     fn scenario_figure_produces_time_series() {
-        let mut base = crate::sim::DesConfig::default();
-        base.scenario = ScenarioParams {
-            topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
-            catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
-            workload: WorkloadParams::default(),
+        let base = crate::sim::DesConfig {
+            scenario: ScenarioParams {
+                topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
+                workload: WorkloadParams::default(),
+            },
+            horizon_ms: 18_000.0,
+            arrival_rate_per_s: 4.0,
+            ..Default::default()
         };
-        base.horizon_ms = 18_000.0;
-        base.arrival_rate_per_s = 4.0;
         let s = run_scenario_figure("flash-crowd", &base, &["gus"], 2).unwrap();
         assert_eq!(s.policies.len(), 1);
         assert_eq!(s.xs.len(), 6, "18 s horizon / 3 s frames");

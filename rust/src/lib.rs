@@ -36,6 +36,7 @@ pub mod figures;
 pub mod metrics;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod scenario;
 pub mod serving;
@@ -58,8 +59,9 @@ pub mod prelude {
         Candidate, Placement, ProblemInstance, Request, Server, ServerClass, ServerId,
         ServiceCatalog, ServiceId, TierId, Topology,
     };
+    pub use crate::obs::{chrome_trace, prometheus, DropReason, Recorder};
     pub use crate::scenario::{run_sweep, Script, SweepConfig};
-    pub use crate::sim::{Des, DesConfig, DesReport, MonteCarlo, PolicyStats};
+    pub use crate::sim::{Des, DesConfig, DesReport, FrameExplain, MonteCarlo, PolicyStats};
     pub use crate::util::rng::Rng;
     pub use crate::workload::{build_instance, ScenarioParams, WorkloadParams};
 }

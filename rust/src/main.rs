@@ -13,9 +13,11 @@
 use anyhow::{Context, Result};
 use edgeus::config::load_montecarlo;
 use edgeus::figures::{run_numerical, NumericalConfig, NumericalFigure};
+use edgeus::obs::{chrome_trace, prometheus, Recorder};
 use edgeus::serving::{ServingConfig, ServingSystem, TestbedExperiment};
 use edgeus::sim::MonteCarlo;
 use edgeus::util::cli::Args;
+use std::sync::Arc;
 
 fn main() {
     let args = Args::from_env(true);
@@ -60,8 +62,64 @@ fn print_usage() {
          [--script FILE.json] [--policies gus,local-all] [--seeds 8] [--seed 7]\n           \
          [--rate 8] [--horizon-s 120] [--threads N] [--save FILE.json] [--csv PATH] [--list]\n  \
          trace [--out trace.json] [--rate 4] [--horizon-s 60] | [--stats FILE]\n  \
-         info [--artifacts DIR]"
+         info [--artifacts DIR]\n\
+         observability (des, scenario, serve, testbed):\n  \
+         [--trace-out T.json] [--metrics-out M.prom] [--trace-capacity 65536]\n  \
+         --trace-out writes a Chrome trace-event file (chrome://tracing / Perfetto);\n  \
+         --metrics-out writes Prometheus-style text; either flag enables the recorder."
     );
+}
+
+/// Build the recorder requested by `--trace-out` / `--metrics-out`;
+/// `None` (recorder fully off) when neither flag is present.
+fn obs_recorder(args: &Args) -> Option<Arc<Recorder>> {
+    if args.get("trace-out").is_none() && args.get("metrics-out").is_none() {
+        return None;
+    }
+    let capacity = args.get_usize("trace-capacity", 1 << 16);
+    Some(Arc::new(Recorder::enabled(capacity)))
+}
+
+/// Write the exports the user asked for from a finished recorder.
+fn write_obs_outputs(args: &Args, rec: &Recorder) -> Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        std::fs::write(path, chrome_trace(rec).dump())?;
+        eprintln!(
+            "wrote {path} ({} trace events retained, {} overwritten)",
+            rec.events().len(),
+            rec.dropped_events()
+        );
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, prometheus(rec))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Re-run one (rate, policy) DES point with the recorder attached and emit
+/// the requested exports plus the per-frame decision-explanation table.
+/// Sweeps stay uninstrumented so their aggregate numbers are untouched.
+fn run_instrumented_des(
+    args: &Args,
+    base: &edgeus::sim::DesConfig,
+    rate: f64,
+    policy: &str,
+) -> Result<()> {
+    let Some(recorder) = obs_recorder(args) else { return Ok(()) };
+    let scheduler = edgeus::coordinator::scheduler_by_name(policy)
+        .with_context(|| format!("unknown policy {policy}"))?;
+    let mut cfg = base.clone();
+    cfg.arrival_rate_per_s = rate;
+    eprintln!("instrumented DES pass: {policy} @ {rate} req/s");
+    let report = edgeus::sim::Des::new(cfg, scheduler.as_ref())
+        .with_recorder(Arc::clone(&recorder))
+        .run();
+    println!(
+        "\n# decision explanations — {policy} @ {rate} req/s\n\n{}",
+        report.explain_markdown()
+    );
+    write_obs_outputs(args, &recorder)
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
@@ -70,10 +128,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         println!("built-in scenarios: {}", Script::builtin_names().join(", "));
         return Ok(());
     }
-    let mut base = edgeus::sim::DesConfig::default();
-    base.horizon_ms = args.get_f64("horizon-s", 120.0) * 1e3;
-    base.arrival_rate_per_s = args.get_f64("rate", 8.0);
-    base.seed = args.get_u64("seed", base.seed);
+    let defaults = edgeus::sim::DesConfig::default();
+    let seed = args.get_u64("seed", defaults.seed);
+    let mut base = edgeus::sim::DesConfig {
+        horizon_ms: args.get_f64("horizon-s", 120.0) * 1e3,
+        arrival_rate_per_s: args.get_f64("rate", 8.0),
+        seed,
+        ..defaults
+    };
     anyhow::ensure!(base.horizon_ms > 0.0, "--horizon-s must be positive");
     anyhow::ensure!(base.arrival_rate_per_s > 0.0, "--rate must be positive");
     let num_seeds = args.get_usize("seeds", 8);
@@ -147,6 +209,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         std::fs::write(path, series.to_csv())?;
         eprintln!("wrote {path}");
     }
+    // Optional instrumented pass (first policy, scripted world events show
+    // up as scenario markers in the trace).
+    if let Some(policy) = cfg.policies.first() {
+        run_instrumented_des(args, &cfg.base, cfg.base.arrival_rate_per_s, policy)?;
+    }
     Ok(())
 }
 
@@ -158,15 +225,22 @@ fn cmd_des(args: &Args) -> Result<()> {
         .get_list("policies")
         .unwrap_or_else(|| vec!["gus".into(), "random".into(), "local-all".into(), "offload-all".into()]);
     let policy_refs: Vec<&str> = policies.iter().map(|s| s.as_str()).collect();
-    let mut base = edgeus::sim::DesConfig::default();
-    base.horizon_ms = args.get_f64("horizon-s", 60.0) * 1e3;
-    base.seed = args.get_u64("seed", base.seed);
+    let defaults = edgeus::sim::DesConfig::default();
+    let base = edgeus::sim::DesConfig {
+        horizon_ms: args.get_f64("horizon-s", 60.0) * 1e3,
+        seed: args.get_u64("seed", defaults.seed),
+        ..defaults
+    };
     eprintln!("discrete-event load sweep: rates {rates:?} req/s over {}s", base.horizon_ms / 1e3);
     let series = edgeus::sim::des::load_sweep(&base, &policy_refs, &rates);
     println!("\n# DES — satisfied users (%) vs offered load\n\n{}", series.to_markdown());
     if let Some(path) = args.get("csv") {
         std::fs::write(path, series.to_csv())?;
         eprintln!("wrote {path}");
+    }
+    // Optional instrumented pass at the first (rate, policy) point.
+    if let (Some(&rate), Some(policy)) = (rates.first(), policies.first()) {
+        run_instrumented_des(args, &base, rate, policy)?;
     }
     Ok(())
 }
@@ -202,10 +276,13 @@ fn cmd_trace(args: &Args) -> Result<()> {
 fn cmd_figure(args: &Args) -> Result<()> {
     let id = args.get("id").context("--id fig1a|fig1b|fig1c|fig1d required")?;
     let figure = NumericalFigure::parse(id).with_context(|| format!("unknown figure {id}"))?;
-    let mut cfg = NumericalConfig::default();
-    cfg.runs = args.get_usize("runs", cfg.runs);
-    cfg.seed = args.get_u64("seed", cfg.seed);
-    cfg.threads = args.get_usize("threads", cfg.threads);
+    let defaults = NumericalConfig::default();
+    let cfg = NumericalConfig {
+        runs: args.get_usize("runs", defaults.runs),
+        seed: args.get_u64("seed", defaults.seed),
+        threads: args.get_usize("threads", defaults.threads),
+        ..defaults
+    };
     eprintln!("running {} with {} Monte-Carlo runs per point...", figure.id(), cfg.runs);
     let series = run_numerical(figure, &cfg);
     println!("\n# {} — {}\n", figure.id(), series.y_label);
@@ -232,11 +309,16 @@ fn cmd_testbed(args: &Args) -> Result<()> {
     exp.base.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
     exp.base.time_scale = args.get_f64("scale", exp.base.time_scale);
     exp.base.seed = args.get_u64("seed", exp.base.seed);
+    let recorder = obs_recorder(args);
+    exp.recorder = recorder.clone();
     eprintln!(
         "testbed sweep: loads {:?}, policies {:?} (time scale {}x)",
         exp.loads, exp.policies, exp.base.time_scale
     );
     let result = exp.run()?;
+    if let Some(r) = &recorder {
+        write_obs_outputs(args, r)?;
+    }
     for (panel, series) in [
         ("fig1e — satisfied users (%)", &result.satisfied),
         ("fig1f — locally processed (%)", &result.local),
@@ -262,20 +344,31 @@ fn cmd_testbed(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut cfg = ServingConfig::default();
-    cfg.artifacts_dir = args.get_or("artifacts", "artifacts").to_string();
-    cfg.scheduler = args.get_or("scheduler", "gus").to_string();
-    cfg.total_requests = args.get_usize("requests", cfg.total_requests);
-    cfg.time_scale = args.get_f64("scale", cfg.time_scale);
-    cfg.seed = args.get_u64("seed", cfg.seed);
-    cfg.deadline_ms = args.get_f64("deadline-ms", cfg.deadline_ms);
-    cfg.min_accuracy_pct = args.get_f64("min-accuracy", cfg.min_accuracy_pct);
+    let defaults = ServingConfig::default();
+    let cfg = ServingConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
+        scheduler: args.get_or("scheduler", "gus").to_string(),
+        total_requests: args.get_usize("requests", defaults.total_requests),
+        time_scale: args.get_f64("scale", defaults.time_scale),
+        seed: args.get_u64("seed", defaults.seed),
+        deadline_ms: args.get_f64("deadline-ms", defaults.deadline_ms),
+        min_accuracy_pct: args.get_f64("min-accuracy", defaults.min_accuracy_pct),
+        ..defaults
+    };
     eprintln!(
         "serving {} requests with {} (time scale {}x)...",
         cfg.total_requests, cfg.scheduler, cfg.time_scale
     );
-    let metrics = ServingSystem::new(cfg)?.run()?;
+    let recorder = obs_recorder(args);
+    let mut system = ServingSystem::new(cfg)?;
+    if let Some(r) = &recorder {
+        system = system.with_recorder(Arc::clone(r));
+    }
+    let metrics = system.run()?;
     println!("{}", metrics.summary_markdown());
+    if let Some(r) = &recorder {
+        write_obs_outputs(args, r)?;
+    }
     Ok(())
 }
 

@@ -2,6 +2,7 @@
 //! table emitters used by the figure-regeneration harness (markdown for
 //! the terminal, CSV/JSON for plotting).
 
+use crate::obs::DropReason;
 use crate::util::json::Json;
 use crate::util::stats::Histogram;
 
@@ -105,6 +106,9 @@ pub struct ServingMetrics {
     pub local: u64,
     pub offload_cloud: u64,
     pub offload_peer: u64,
+    /// Drops broken down by [`DropReason`], indexed by `reason.index()`.
+    /// Invariant: sums to `dropped` (see [`ServingMetrics::check_conservation`]).
+    pub drop_reasons: [u64; DropReason::COUNT],
     /// End-to-end completion latency (ms).
     pub latency: Histogram,
     /// Model-inference latency alone (ms).
@@ -122,6 +126,7 @@ impl Default for ServingMetrics {
             local: 0,
             offload_cloud: 0,
             offload_peer: 0,
+            drop_reasons: [0; DropReason::COUNT],
             latency: Histogram::exponential(1.0, 2.0, 16),
             inference: Histogram::exponential(0.125, 2.0, 16),
             wall_ms: 0.0,
@@ -153,6 +158,52 @@ impl ServingMetrics {
         self.pct(self.dropped)
     }
 
+    /// Record one drop with its reason; keeps `dropped` and the per-reason
+    /// breakdown in lockstep so conservation cannot drift.
+    pub fn add_drop(&mut self, reason: DropReason) {
+        self.dropped += 1;
+        self.drop_reasons[reason.index()] += 1;
+    }
+
+    /// Drops attributed to `reason`.
+    pub fn drops(&self, reason: DropReason) -> u64 {
+        self.drop_reasons[reason.index()]
+    }
+
+    /// Verify the request-conservation invariants:
+    /// `served + dropped == total_requests` and the per-reason drop
+    /// breakdown sums to `dropped`.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let reason_sum: u64 = self.drop_reasons.iter().sum();
+        if reason_sum != self.dropped {
+            return Err(format!(
+                "drop reasons sum to {reason_sum} but dropped = {}",
+                self.dropped
+            ));
+        }
+        if self.served + self.dropped != self.total_requests {
+            return Err(format!(
+                "served ({}) + dropped ({}) != total_requests ({})",
+                self.served, self.dropped, self.total_requests
+            ));
+        }
+        Ok(())
+    }
+
+    /// Human-readable per-reason drop breakdown, `-` when no drops.
+    fn drop_reasons_str(&self) -> String {
+        let parts: Vec<String> = DropReason::ALL
+            .iter()
+            .filter(|r| self.drops(**r) > 0)
+            .map(|r| format!("{}: {}", r.as_str(), self.drops(*r)))
+            .collect();
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(", ")
+        }
+    }
+
     fn pct(&self, v: u64) -> f64 {
         if self.total_requests == 0 {
             0.0
@@ -173,7 +224,8 @@ impl ServingMetrics {
         format!(
             "| metric | value |\n|---|---|\n\
              | requests | {} |\n| served | {} |\n| satisfied | {} ({:.1}%) |\n\
-             | dropped | {} ({:.1}%) |\n| local | {:.1}% |\n| offload→cloud | {:.1}% |\n\
+             | dropped | {} ({:.1}%) |\n| drop reasons | {} |\n\
+             | local | {:.1}% |\n| offload→cloud | {:.1}% |\n\
              | offload→peer | {:.1}% |\n| p50 latency | {:.0} ms |\n\
              | p99 latency | {:.0} ms |\n| mean inference | {:.2} ms |\n\
              | throughput | {:.1} req/s |\n",
@@ -183,6 +235,7 @@ impl ServingMetrics {
             self.satisfied_pct(),
             self.dropped,
             self.dropped_pct(),
+            self.drop_reasons_str(),
             self.local_pct(),
             self.cloud_pct(),
             self.peer_pct(),
@@ -233,15 +286,17 @@ mod tests {
 
     #[test]
     fn serving_metrics_percentages() {
-        let mut m = ServingMetrics::default();
-        m.total_requests = 10;
-        m.served = 8;
-        m.satisfied = 6;
-        m.dropped = 2;
-        m.local = 4;
-        m.offload_cloud = 3;
-        m.offload_peer = 1;
-        m.wall_ms = 2000.0;
+        let m = ServingMetrics {
+            total_requests: 10,
+            served: 8,
+            satisfied: 6,
+            dropped: 2,
+            local: 4,
+            offload_cloud: 3,
+            offload_peer: 1,
+            wall_ms: 2000.0,
+            ..ServingMetrics::default()
+        };
         assert!((m.satisfied_pct() - 60.0).abs() < 1e-12);
         assert!((m.local_pct() - 40.0).abs() < 1e-12);
         assert!((m.throughput_rps() - 4.0).abs() < 1e-12);
@@ -253,5 +308,35 @@ mod tests {
         let m = ServingMetrics::default();
         assert_eq!(m.satisfied_pct(), 0.0);
         assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn drop_reasons_accumulate_and_conserve() {
+        let mut m = ServingMetrics { total_requests: 5, served: 2, ..ServingMetrics::default() };
+        m.add_drop(DropReason::QueueFull);
+        m.add_drop(DropReason::QueueFull);
+        m.add_drop(DropReason::DeadlineInfeasible);
+        assert_eq!(m.dropped, 3);
+        assert_eq!(m.drops(DropReason::QueueFull), 2);
+        assert_eq!(m.drops(DropReason::DeadlineInfeasible), 1);
+        assert_eq!(m.drops(DropReason::ServerDown), 0);
+        m.check_conservation().unwrap();
+        let md = m.summary_markdown();
+        assert!(md.contains("queue-full: 2"));
+        assert!(md.contains("deadline-infeasible: 1"));
+    }
+
+    #[test]
+    fn conservation_rejects_unaccounted_requests() {
+        // A bare `dropped` bump without a reason breaks the breakdown sum.
+        let mut m = ServingMetrics { total_requests: 2, served: 1, ..ServingMetrics::default() };
+        m.dropped = 1;
+        assert!(m.check_conservation().is_err());
+        // And served + dropped must cover every generated request.
+        let mut m = ServingMetrics { total_requests: 3, served: 1, ..ServingMetrics::default() };
+        m.add_drop(DropReason::Policy);
+        assert!(m.check_conservation().is_err());
+        // The empty default conserves trivially.
+        ServingMetrics::default().check_conservation().unwrap();
     }
 }

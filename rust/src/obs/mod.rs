@@ -1,0 +1,101 @@
+//! Zero-dependency observability substrate: a preallocated ring-buffer
+//! event recorder with typed spans / counters / gauges, a shared
+//! drop-reason taxonomy for scheduler explainability, and two exporters
+//! (Chrome trace-event JSON for Perfetto / chrome://tracing, and
+//! Prometheus-style text exposition).
+//!
+//! Design goals, in priority order:
+//!
+//! 1. **Free when off.** Recording is disabled by default; every record
+//!    call checks a plain `bool` before touching any shared state, so a
+//!    disabled recorder costs one predictable branch per call site. The
+//!    `obs_overhead` bench enforces a ≤5% DES-throughput budget for the
+//!    disabled path.
+//! 2. **Allocation-free when on.** The ring is allocated once up front;
+//!    event names and labels are `&'static str`. A full ring overwrites
+//!    the oldest events rather than growing.
+//! 3. **Deterministic exports.** Counters and gauges live in `BTreeMap`s
+//!    so exporters emit in sorted order; same run → same bytes.
+
+pub mod prom;
+pub mod recorder;
+pub mod trace;
+
+pub use prom::prometheus;
+pub use recorder::{Event, Key, Phase, Recorder, PID_VIRTUAL, PID_WALL};
+pub use trace::chrome_trace;
+
+/// Why a request was not served — the rejection taxonomy shared by the
+/// coordinator explainer, the DES, the serving runtime, and both
+/// exporters. Labels (`as_str`) are stable: they appear in Prometheus
+/// counter labels, trace annotations, and report tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropReason {
+    /// No candidate meets the QoS thresholds (2b)/(2c) on any server:
+    /// the request was infeasible no matter what the policy did.
+    DeadlineInfeasible,
+    /// QoS-feasible candidates exist, but the residual γ/η left after
+    /// the served assignments cannot host any of them.
+    CapacityExhausted,
+    /// No live, reachable (server, tier) candidate at all — the target
+    /// servers or the covering edge are down (or no replica is placed).
+    ServerDown,
+    /// The policy declined even though a feasible candidate still fit
+    /// (e.g. a greedy ordering spent capacity elsewhere, or Random
+    /// picked nothing). Labelled plain "dropped".
+    Policy,
+    /// Bounced at the admission queue before any decision frame saw it.
+    QueueFull,
+}
+
+impl DropReason {
+    pub const COUNT: usize = 5;
+
+    /// Every reason, in `index()` order.
+    pub const ALL: [DropReason; DropReason::COUNT] = [
+        DropReason::DeadlineInfeasible,
+        DropReason::CapacityExhausted,
+        DropReason::ServerDown,
+        DropReason::Policy,
+        DropReason::QueueFull,
+    ];
+
+    /// Stable label used in counters, traces, and report tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DropReason::DeadlineInfeasible => "deadline-infeasible",
+            DropReason::CapacityExhausted => "capacity-exhausted",
+            DropReason::ServerDown => "server-down",
+            DropReason::Policy => "dropped",
+            DropReason::QueueFull => "queue-full",
+        }
+    }
+
+    /// Dense index into per-reason count arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_reason_indices_are_dense_and_ordered() {
+        for (i, r) in DropReason::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+        }
+        assert_eq!(DropReason::ALL.len(), DropReason::COUNT);
+    }
+
+    #[test]
+    fn drop_reason_labels_are_unique() {
+        let labels: Vec<&str> = DropReason::ALL.iter().map(|r| r.as_str()).collect();
+        for (i, a) in labels.iter().enumerate() {
+            for b in labels.iter().skip(i + 1) {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Prometheus-style text-exposition exporter. Renders the recorder's
+//! counters and gauges as `# TYPE` blocks with `name{key="value"} v`
+//! sample lines — the format `promtool check metrics` and any
+//! Prometheus scraper accept. Output is deterministic: metrics emit in
+//! sorted (name, label key, label value) order.
+
+use crate::obs::recorder::{Key, Recorder};
+use std::fmt::Write as _;
+
+/// Render every counter and gauge in the Prometheus text format.
+pub fn prometheus(rec: &Recorder) -> String {
+    let mut out = String::new();
+    render(&mut out, "counter", &rec.counters());
+    render(&mut out, "gauge", &rec.gauges());
+    out
+}
+
+fn render(out: &mut String, kind: &str, metrics: &[(Key, f64)]) {
+    let mut last = "";
+    for ((name, label_key, label_val), v) in metrics {
+        if *name != last {
+            let _ = writeln!(out, "# TYPE {name} {kind}");
+            last = name;
+        }
+        if label_key.is_empty() {
+            let _ = writeln!(out, "{name} {v}");
+        } else {
+            let _ = writeln!(out, "{name}{{{label_key}=\"{label_val}\"}} {v}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::PID_VIRTUAL;
+
+    #[test]
+    fn renders_type_headers_once_per_metric() {
+        let r = Recorder::enabled(4);
+        r.add_labeled("edgeus_des_dropped_total", "reason", "queue-full", 2.0);
+        r.add_labeled("edgeus_des_dropped_total", "reason", "dropped", 1.0);
+        r.add("edgeus_des_generated_total", 10.0);
+        r.sample("edgeus_des_queue_depth", PID_VIRTUAL, 0, 0.0, 4.0);
+        let text = prometheus(&r);
+        assert_eq!(
+            text.matches("# TYPE edgeus_des_dropped_total counter").count(),
+            1
+        );
+        assert!(text.contains("edgeus_des_dropped_total{reason=\"queue-full\"} 2\n"));
+        assert!(text.contains("edgeus_des_dropped_total{reason=\"dropped\"} 1\n"));
+        assert!(text.contains("# TYPE edgeus_des_generated_total counter"));
+        assert!(text.contains("edgeus_des_generated_total 10\n"));
+        assert!(text.contains("# TYPE edgeus_des_queue_depth gauge"));
+        assert!(text.contains("edgeus_des_queue_depth 4\n"));
+    }
+
+    #[test]
+    fn declared_counters_emit_at_zero() {
+        let r = Recorder::enabled(4);
+        r.declare("edgeus_serve_dropped_total", "reason", "server-down");
+        let text = prometheus(&r);
+        assert!(text.contains("edgeus_serve_dropped_total{reason=\"server-down\"} 0\n"));
+    }
+
+    #[test]
+    fn disabled_recorder_renders_empty() {
+        assert!(prometheus(&Recorder::disabled()).is_empty());
+    }
+}

@@ -1,0 +1,349 @@
+//! Preallocated ring-buffer event recorder.
+//!
+//! Construct either [`Recorder::enabled`] (one upfront ring allocation)
+//! or [`Recorder::disabled`] (no allocation). Every record method checks
+//! a plain `bool` before locking, so a disabled recorder adds a single
+//! predictable branch per call site and never touches the mutex. Event
+//! names and labels are `&'static str`, so recording never allocates;
+//! a full ring overwrites the oldest events ([`Recorder::dropped_events`]
+//! reports how many were lost).
+//!
+//! Share across threads as `Arc<Recorder>` — all methods take `&self`.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Trace "process" id for events stamped in *virtual / simulated* time.
+pub const PID_VIRTUAL: u32 = 1;
+/// Trace "process" id for events stamped in *wall-clock* time.
+pub const PID_WALL: u32 = 2;
+
+/// What an [`Event`] means in the Chrome trace-event model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Complete span (`ph: "X"`): starts at `ts_ms`, lasts `dur_ms`.
+    Span,
+    /// Instant marker (`ph: "i"`), e.g. an arrival or a world event.
+    Instant,
+    /// Counter sample (`ph: "C"`): `value` plotted over time.
+    Counter,
+}
+
+/// One recorded event. `Copy` and allocation-free by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    /// Category, e.g. "des", "serve", "scenario".
+    pub cat: &'static str,
+    pub phase: Phase,
+    /// Timeline: [`PID_VIRTUAL`] or [`PID_WALL`].
+    pub pid: u32,
+    /// Track within the timeline (e.g. a server id); renders as a
+    /// trace thread.
+    pub track: u32,
+    pub ts_ms: f64,
+    /// Span duration; 0 for instants and counters.
+    pub dur_ms: f64,
+    /// Correlation id (request id, decision index); 0 = none.
+    pub id: u64,
+    /// Counter value ([`Phase::Counter`] only).
+    pub value: f64,
+    /// Short static annotation (e.g. a drop reason); "" = none.
+    pub label: &'static str,
+}
+
+/// Metric key: (name, label key, label value); ("", "") = unlabeled.
+pub type Key = (&'static str, &'static str, &'static str);
+
+#[derive(Debug, Default)]
+struct Inner {
+    ring: Vec<Event>,
+    head: usize,
+    total: u64,
+    counters: BTreeMap<Key, f64>,
+    gauges: BTreeMap<Key, f64>,
+}
+
+/// See module docs.
+#[derive(Debug)]
+pub struct Recorder {
+    on: bool,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    /// An enabled recorder holding up to `capacity` ring events
+    /// (clamped to ≥ 1).
+    pub fn enabled(capacity: usize) -> Recorder {
+        let capacity = capacity.max(1);
+        Recorder {
+            on: true,
+            capacity,
+            inner: Mutex::new(Inner {
+                ring: Vec::with_capacity(capacity),
+                ..Inner::default()
+            }),
+        }
+    }
+
+    /// A disabled recorder: every record call is a single branch.
+    pub fn disabled() -> Recorder {
+        Recorder { on: false, capacity: 0, inner: Mutex::new(Inner::default()) }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.on
+    }
+
+    fn record(&self, ev: Event) {
+        let mut g = self.inner.lock().unwrap();
+        if g.ring.len() < self.capacity {
+            g.ring.push(ev);
+        } else {
+            let h = g.head;
+            g.ring[h] = ev;
+        }
+        g.head = (g.head + 1) % self.capacity;
+        g.total += 1;
+    }
+
+    /// Record a complete span.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        pid: u32,
+        track: u32,
+        ts_ms: f64,
+        dur_ms: f64,
+        id: u64,
+    ) {
+        if !self.on {
+            return;
+        }
+        self.record(Event {
+            name,
+            cat,
+            phase: Phase::Span,
+            pid,
+            track,
+            ts_ms,
+            dur_ms: dur_ms.max(0.0),
+            id,
+            value: 0.0,
+            label: "",
+        });
+    }
+
+    /// Record an instant marker; `label` annotates it (e.g. a drop
+    /// reason or a scripted-event kind).
+    #[allow(clippy::too_many_arguments)]
+    pub fn instant(
+        &self,
+        cat: &'static str,
+        name: &'static str,
+        pid: u32,
+        track: u32,
+        ts_ms: f64,
+        label: &'static str,
+        id: u64,
+    ) {
+        if !self.on {
+            return;
+        }
+        self.record(Event {
+            name,
+            cat,
+            phase: Phase::Instant,
+            pid,
+            track,
+            ts_ms,
+            dur_ms: 0.0,
+            id,
+            value: 0.0,
+            label,
+        });
+    }
+
+    /// Sample a gauge: stores the latest value and drops a counter-track
+    /// point on the trace timeline so it plots over time.
+    pub fn sample(&self, name: &'static str, pid: u32, track: u32, ts_ms: f64, value: f64) {
+        if !self.on {
+            return;
+        }
+        self.inner.lock().unwrap().gauges.insert((name, "", ""), value);
+        self.record(Event {
+            name,
+            cat: "gauge",
+            phase: Phase::Counter,
+            pid,
+            track,
+            ts_ms,
+            dur_ms: 0.0,
+            id: 0,
+            value,
+            label: "",
+        });
+    }
+
+    /// Add to an unlabeled monotonic counter.
+    pub fn add(&self, name: &'static str, delta: f64) {
+        self.add_labeled(name, "", "", delta);
+    }
+
+    /// Add to a labeled counter (one label key/value pair).
+    pub fn add_labeled(
+        &self,
+        name: &'static str,
+        label_key: &'static str,
+        label_val: &'static str,
+        delta: f64,
+    ) {
+        if !self.on {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry((name, label_key, label_val)).or_insert(0.0) += delta;
+    }
+
+    /// Pre-register a counter at zero so exporters always emit it even
+    /// if it never fires (drop-reason counters rely on this).
+    pub fn declare(&self, name: &'static str, label_key: &'static str, label_val: &'static str) {
+        if !self.on {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.counters.entry((name, label_key, label_val)).or_insert(0.0);
+    }
+
+    // ---- read side -----------------------------------------------------
+
+    /// Ring contents, oldest first.
+    pub fn events(&self) -> Vec<Event> {
+        let g = self.inner.lock().unwrap();
+        if g.ring.len() < self.capacity {
+            g.ring.clone()
+        } else {
+            let mut out = Vec::with_capacity(g.ring.len());
+            out.extend_from_slice(&g.ring[g.head..]);
+            out.extend_from_slice(&g.ring[..g.head]);
+            out
+        }
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total_events(&self) -> u64 {
+        self.inner.lock().unwrap().total
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped_events(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.total - g.ring.len() as u64
+    }
+
+    /// All counters, sorted by (name, label key, label value).
+    pub fn counters(&self) -> Vec<(Key, f64)> {
+        self.inner.lock().unwrap().counters.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
+    /// All gauges (latest sampled value per name), sorted by key.
+    pub fn gauges(&self) -> Vec<(Key, f64)> {
+        self.inner.lock().unwrap().gauges.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+
+    /// Current value of one counter (0.0 if never touched). Pass ""
+    /// for both label parts to read an unlabeled counter.
+    pub fn counter_value(&self, name: &str, label_key: &str, label_val: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .iter()
+            .find(|((n, lk, lv), _)| *n == name && *lk == label_key && *lv == label_val)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        r.span("t", "s", PID_VIRTUAL, 0, 1.0, 2.0, 1);
+        r.instant("t", "i", PID_VIRTUAL, 0, 1.0, "x", 2);
+        r.sample("g", PID_VIRTUAL, 0, 1.0, 42.0);
+        r.add("c", 1.0);
+        r.declare("d", "k", "v");
+        assert_eq!(r.total_events(), 0);
+        assert!(r.events().is_empty());
+        assert!(r.counters().is_empty());
+        assert!(r.gauges().is_empty());
+        assert_eq!(r.counter_value("c", "", ""), 0.0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reads_in_order() {
+        let r = Recorder::enabled(3);
+        for i in 0..5u64 {
+            r.instant("t", "i", PID_VIRTUAL, 0, i as f64, "", i);
+        }
+        assert_eq!(r.total_events(), 5);
+        assert_eq!(r.dropped_events(), 2);
+        let ids: Vec<u64> = r.events().iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn partial_ring_reads_in_insertion_order() {
+        let r = Recorder::enabled(8);
+        r.instant("t", "a", PID_VIRTUAL, 0, 0.0, "", 1);
+        r.span("t", "b", PID_WALL, 2, 1.0, 0.5, 2);
+        assert_eq!(r.dropped_events(), 0);
+        let evs = r.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "a");
+        assert_eq!(evs[1].name, "b");
+        assert_eq!(evs[1].phase, Phase::Span);
+    }
+
+    #[test]
+    fn counters_accumulate_and_sort_by_key() {
+        let r = Recorder::enabled(4);
+        r.add("z_total", 1.0);
+        r.add_labeled("a_total", "reason", "x", 2.0);
+        r.add_labeled("a_total", "reason", "x", 3.0);
+        r.declare("a_total", "reason", "never");
+        let c = r.counters();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0], (("a_total", "reason", "never"), 0.0));
+        assert_eq!(c[1], (("a_total", "reason", "x"), 5.0));
+        assert_eq!(c[2], (("z_total", "", ""), 1.0));
+        assert_eq!(r.counter_value("a_total", "reason", "x"), 5.0);
+    }
+
+    #[test]
+    fn gauges_keep_latest_value() {
+        let r = Recorder::enabled(8);
+        r.sample("depth", PID_VIRTUAL, 0, 0.0, 3.0);
+        r.sample("depth", PID_VIRTUAL, 0, 1.0, 7.0);
+        assert_eq!(r.gauges(), vec![(("depth", "", ""), 7.0)]);
+        // each sample also leaves a plottable ring event
+        assert_eq!(r.events().len(), 2);
+        assert_eq!(r.events()[1].value, 7.0);
+    }
+
+    #[test]
+    fn negative_span_duration_is_clamped() {
+        let r = Recorder::enabled(2);
+        r.span("t", "s", PID_WALL, 0, 5.0, -1.0, 0);
+        assert_eq!(r.events()[0].dur_ms, 0.0);
+    }
+}

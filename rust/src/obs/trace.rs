@@ -1,0 +1,144 @@
+//! Chrome trace-event JSON exporter. The output object loads directly
+//! in Perfetto (ui.perfetto.dev) or chrome://tracing: open the file and
+//! the virtual-time and wall-clock timelines render as two processes,
+//! with one track per server / phase.
+//!
+//! Format notes (trace-event spec): timestamps and durations are in
+//! microseconds; `"X"` = complete span, `"i"` = instant (scope `"t"` =
+//! thread), `"C"` = counter, `"M"` = metadata. We stamp simulated
+//! milliseconds ×1000 so virtual time reads naturally in the UI.
+
+use crate::obs::recorder::{Event, Phase, Recorder, PID_VIRTUAL, PID_WALL};
+use crate::util::json::Json;
+
+/// Export the recorder's ring as a Chrome trace-event JSON object.
+/// Deterministic for a given recorder state; round-trips through
+/// [`Json::parse`].
+pub fn chrome_trace(rec: &Recorder) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (pid, name) in [(PID_VIRTUAL, "virtual-time"), (PID_WALL, "wall-clock")] {
+        events.push(Json::obj(vec![
+            ("ph", Json::str("M")),
+            ("name", Json::str("process_name")),
+            ("pid", Json::num(f64::from(pid))),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str(name))])),
+        ]));
+    }
+    for e in rec.events() {
+        events.push(event_json(&e));
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(events)),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("total_events", Json::num(rec.total_events() as f64)),
+                ("dropped_events", Json::num(rec.dropped_events() as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn event_json(e: &Event) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("name", Json::str(e.name)),
+        ("cat", Json::str(e.cat)),
+        ("pid", Json::num(f64::from(e.pid))),
+        ("tid", Json::num(f64::from(e.track))),
+        ("ts", Json::num(e.ts_ms * 1_000.0)),
+    ];
+    let mut args: Vec<(&str, Json)> = Vec::new();
+    if e.id != 0 {
+        args.push(("id", Json::num(e.id as f64)));
+    }
+    if !e.label.is_empty() {
+        args.push(("label", Json::str(e.label)));
+    }
+    match e.phase {
+        Phase::Span => {
+            fields.push(("ph", Json::str("X")));
+            fields.push(("dur", Json::num(e.dur_ms * 1_000.0)));
+        }
+        Phase::Instant => {
+            fields.push(("ph", Json::str("i")));
+            fields.push(("s", Json::str("t")));
+        }
+        Phase::Counter => {
+            fields.push(("ph", Json::str("C")));
+            args.push((e.name, Json::num(e.value)));
+        }
+    }
+    if !args.is_empty() {
+        fields.push(("args", Json::obj(args)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_recorder() -> Recorder {
+        let r = Recorder::enabled(16);
+        r.span("des", "serve", PID_VIRTUAL, 3, 10.0, 2.5, 42);
+        r.instant("des", "drop", PID_VIRTUAL, 1, 11.0, "queue-full", 7);
+        r.sample("edgeus_des_queue_depth", PID_VIRTUAL, 0, 12.0, 5.0);
+        r
+    }
+
+    #[test]
+    fn trace_has_metadata_and_all_ring_events() {
+        let j = chrome_trace(&demo_recorder());
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        // 2 process_name metadata records + 3 ring events
+        assert_eq!(evs.len(), 5);
+        assert_eq!(evs[0].get("ph").as_str().unwrap(), "M");
+        assert_eq!(
+            evs[0].get("args").get("name").as_str().unwrap(),
+            "virtual-time"
+        );
+        assert_eq!(j.get("displayTimeUnit").as_str().unwrap(), "ms");
+    }
+
+    #[test]
+    fn span_converts_ms_to_us_and_carries_id() {
+        let j = chrome_trace(&demo_recorder());
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        let span = &evs[2];
+        assert_eq!(span.get("ph").as_str().unwrap(), "X");
+        assert_eq!(span.get("ts").as_f64().unwrap(), 10_000.0);
+        assert_eq!(span.get("dur").as_f64().unwrap(), 2_500.0);
+        assert_eq!(span.get("tid").as_f64().unwrap(), 3.0);
+        assert_eq!(span.get("args").get("id").as_f64().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn instant_and_counter_shapes() {
+        let j = chrome_trace(&demo_recorder());
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        let inst = &evs[3];
+        assert_eq!(inst.get("ph").as_str().unwrap(), "i");
+        assert_eq!(inst.get("s").as_str().unwrap(), "t");
+        assert_eq!(inst.get("args").get("label").as_str().unwrap(), "queue-full");
+        let ctr = &evs[4];
+        assert_eq!(ctr.get("ph").as_str().unwrap(), "C");
+        assert_eq!(
+            ctr.get("args").get("edgeus_des_queue_depth").as_f64().unwrap(),
+            5.0
+        );
+    }
+
+    #[test]
+    fn trace_round_trips_through_json_parse() {
+        let j = chrome_trace(&demo_recorder());
+        let dump = j.dump();
+        let parsed = Json::parse(&dump).expect("trace JSON must parse");
+        assert_eq!(parsed.dump(), dump);
+        assert_eq!(
+            parsed.get("otherData").get("total_events").as_f64().unwrap(),
+            3.0
+        );
+    }
+}

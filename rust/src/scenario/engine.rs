@@ -74,6 +74,18 @@ impl ScenarioEngine {
         topology: &mut Topology,
         placement: &mut Placement,
     ) -> u64 {
+        self.advance_traced(now_ms, topology, placement, None)
+    }
+
+    /// [`ScenarioEngine::advance`], additionally dropping a world-event
+    /// marker (instant + labeled counter) on `obs` per applied event.
+    pub fn advance_traced(
+        &mut self,
+        now_ms: f64,
+        topology: &mut Topology,
+        placement: &mut Placement,
+        obs: Option<&crate::obs::Recorder>,
+    ) -> u64 {
         let mut applied = 0u64;
         while self.cursor < self.script.events.len()
             && self.script.events[self.cursor].at_ms <= now_ms
@@ -82,6 +94,11 @@ impl ScenarioEngine {
             self.cursor += 1;
             if self.apply(&ev, topology, placement) {
                 applied += 1;
+                if let Some(r) = obs {
+                    let label = ev.kind.label();
+                    r.instant("scenario", label, crate::obs::PID_VIRTUAL, 0, now_ms, "", 0);
+                    r.add_labeled("edgeus_scenario_events_total", "kind", label, 1.0);
+                }
             }
         }
         self.applied_total += applied;
@@ -349,6 +366,27 @@ mod tests {
         assert_eq!(e.arrival_multiplier(1500.0), 6.0);
         assert_eq!(e.arrival_multiplier(2999.0), 6.0);
         assert_eq!(e.arrival_multiplier(3000.0), 1.0, "window closed");
+    }
+
+    #[test]
+    fn advance_traced_drops_markers_and_counters() {
+        let (mut topo, mut plc, _) = world();
+        let rec = crate::obs::Recorder::enabled(16);
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent { at_ms: 0.0, kind: EventKind::ServerDown { server: 0 } },
+                ScriptedEvent { at_ms: 0.0, kind: EventKind::ServerUp { server: 0 } },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        assert_eq!(e.advance_traced(0.0, &mut topo, &mut plc, Some(&rec)), 2);
+        let names: Vec<&str> = rec.events().iter().map(|ev| ev.name).collect();
+        assert_eq!(names, vec!["server_down", "server_up"]);
+        assert_eq!(
+            rec.counter_value("edgeus_scenario_events_total", "kind", "server_down"),
+            1.0
+        );
     }
 
     #[test]

@@ -21,6 +21,7 @@
 pub mod clock;
 pub mod node;
 
+use crate::coordinator::explain::{explain_schedule, Outcome};
 use crate::coordinator::us::Assignment;
 use crate::coordinator::{scheduler_by_name, Schedule, Scheduler};
 use crate::metrics::ServingMetrics;
@@ -30,6 +31,7 @@ use crate::model::service::{Placement, ServiceCatalog, ServiceId, TierId, TierPr
 use crate::model::topology::Topology;
 use crate::model::ProblemInstance;
 use crate::net::{BandwidthEstimator, Link};
+use crate::obs::{DropReason, Recorder, PID_VIRTUAL, PID_WALL};
 use crate::runtime::Manifest;
 use crate::serving::clock::SimClock;
 use crate::serving::node::{Completion, ExecJob, ServerNode};
@@ -119,6 +121,7 @@ pub struct ServingSystem {
     cfg: ServingConfig,
     manifest: Manifest,
     tiers: Vec<String>,
+    recorder: Option<Arc<Recorder>>,
 }
 
 impl ServingSystem {
@@ -130,7 +133,13 @@ impl ServingSystem {
                 anyhow::bail!("tier {t} not in manifest (has {tiers:?})");
             }
         }
-        Ok(ServingSystem { cfg, manifest, tiers })
+        Ok(ServingSystem { cfg, manifest, tiers, recorder: None })
+    }
+
+    /// Attach an observability recorder; a disabled one is free.
+    pub fn with_recorder(mut self, recorder: Arc<Recorder>) -> ServingSystem {
+        self.recorder = Some(recorder);
+        self
     }
 
     /// The scheduler-visible catalog: one service ("classify") whose tiers
@@ -210,6 +219,16 @@ impl ServingSystem {
         let cloud_id = cfg.num_edge; // last server
         let num_servers = cfg.num_edge + 1;
 
+        // Observability: Some only for an enabled recorder, so the
+        // request path pays one branch per site when off.
+        let recorder = self.recorder.clone().filter(|r| r.is_enabled());
+        if let Some(r) = &recorder {
+            for reason in DropReason::ALL {
+                r.declare("edgeus_serve_dropped_total", "reason", reason.as_str());
+            }
+        }
+        let wall_t0 = std::time::Instant::now();
+
         // Metrics plumbing.
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         let finished = Arc::new(AtomicUsize::new(0));
@@ -219,23 +238,51 @@ impl ServingSystem {
         let collector = {
             let metrics = Arc::clone(&metrics);
             let finished = Arc::clone(&finished);
+            let recorder = recorder.clone();
             std::thread::spawn(move || {
                 while let Ok((c, a_min, c_max)) = completion_rx.recv() {
+                    let ok = c.accuracy_pct >= a_min && c.completion_ms <= c_max;
                     let mut m = metrics.lock().unwrap();
                     m.served += 1;
-                    if c.accuracy_pct >= a_min && c.completion_ms <= c_max {
+                    if ok {
                         m.satisfied += 1;
                     }
-                    if c.served_local {
+                    let kind = if c.served_local {
                         m.local += 1;
+                        "local"
                     } else if c.served_by_cloud {
                         m.offload_cloud += 1;
+                        "cloud"
                     } else {
                         m.offload_peer += 1;
-                    }
+                        "peer"
+                    };
                     m.latency.record(c.completion_ms);
                     m.inference.record(c.inference_real_ms.max(1e-3));
                     drop(m);
+                    if let Some(r) = &recorder {
+                        // Full lifecycle span: arrival → reply, in sim time.
+                        let track = match kind {
+                            "local" => 0,
+                            "cloud" => 1,
+                            _ => 2,
+                        };
+                        r.span(
+                            "serve",
+                            "serve",
+                            PID_VIRTUAL,
+                            track,
+                            c.arrival_sim_ms,
+                            c.completion_ms,
+                            c.request_id,
+                        );
+                        r.add("edgeus_serve_served_total", 1.0);
+                        if ok {
+                            r.add("edgeus_serve_satisfied_total", 1.0);
+                        }
+                        r.add_labeled("edgeus_serve_assigned_total", "kind", kind, 1.0);
+                        r.add("edgeus_serve_inference_ms_total", c.inference_real_ms.max(0.0));
+                    }
                     finished.fetch_add(1, Ordering::SeqCst);
                 }
             })
@@ -293,6 +340,7 @@ impl ServingSystem {
             let metrics = Arc::clone(&metrics);
             let finished = Arc::clone(&finished);
             let generated = Arc::clone(&generated);
+            let recorder = recorder.clone();
             let total = cfg.total_requests;
             let window = cfg.window_ms;
             let seed = cfg.seed;
@@ -311,12 +359,36 @@ impl ServingSystem {
                         payload_bytes: rng.u64_range(8_000, 20_000),
                         images,
                     };
+                    let arrival_sim = req.arrival_sim_ms;
                     generated.fetch_add(1, Ordering::SeqCst);
                     let admitted = queues[edge].lock().unwrap().push(req, clock.now_ms());
+                    if let Some(r) = &recorder {
+                        r.instant("serve", "arrival", PID_VIRTUAL, edge as u32, arrival_sim, "", id);
+                        r.add("edgeus_serve_arrivals_total", 1.0);
+                    }
                     if !admitted {
+                        // Bounded admission queue rejection: the only drop
+                        // site outside the scheduler's decision.
                         let mut m = metrics.lock().unwrap();
-                        m.dropped += 1;
+                        m.add_drop(DropReason::QueueFull);
                         drop(m);
+                        if let Some(r) = &recorder {
+                            r.add_labeled(
+                                "edgeus_serve_dropped_total",
+                                "reason",
+                                DropReason::QueueFull.as_str(),
+                                1.0,
+                            );
+                            r.instant(
+                                "serve",
+                                "drop",
+                                PID_VIRTUAL,
+                                edge as u32,
+                                arrival_sim,
+                                DropReason::QueueFull.as_str(),
+                                id,
+                            );
+                        }
                         finished.fetch_add(1, Ordering::SeqCst);
                     }
                 }
@@ -396,15 +468,55 @@ impl ServingSystem {
                 .collect();
             let inst = ProblemInstance::new(topology, catalog.clone(), placement.clone(), requests)
                 .with_normalization(100.0, 12_000.0);
+            let sched_w0 =
+                recorder.as_ref().map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
             let schedule: Schedule = scheduler.schedule(&inst, &mut leader_rng);
+            if let (Some(r), Some(w0)) = (&recorder, sched_w0) {
+                let w1 = wall_t0.elapsed().as_secs_f64() * 1e3;
+                r.span("leader", "frame.schedule", PID_WALL, 0, w0, w1 - w0, 0);
+                r.instant("leader", "decision", PID_VIRTUAL, 0, now, "", 0);
+                r.sample("edgeus_serve_frame_requests", PID_VIRTUAL, 0, now, inst.requests.len() as f64);
+            }
+            // Post-hoc decision explanation: needed for the trace and to
+            // classify scheduler-rejected requests by drop reason.
+            let needs_explain =
+                recorder.is_some() || schedule.slots.iter().any(|s| s.is_none());
+            let explain = if needs_explain { Some(explain_schedule(&inst, &schedule)) } else { None };
+            if let (Some(r), Some(ex)) = (&recorder, &explain) {
+                r.add("edgeus_serve_candidates_total", ex.candidates_considered as f64);
+            }
 
             // Dispatch.
-            for (i, (_e, req, _tq)) in pending.into_iter().enumerate() {
+            for (i, (e, req, _tq)) in pending.into_iter().enumerate() {
                 match &schedule.slots[i] {
                     None => {
+                        let reason = explain
+                            .as_ref()
+                            .map(|ex| match ex.outcomes[i].outcome {
+                                Outcome::Dropped(r) => r,
+                                _ => DropReason::Policy,
+                            })
+                            .unwrap_or(DropReason::Policy);
                         let mut m = metrics.lock().unwrap();
-                        m.dropped += 1;
+                        m.add_drop(reason);
                         drop(m);
+                        if let Some(r) = &recorder {
+                            r.add_labeled(
+                                "edgeus_serve_dropped_total",
+                                "reason",
+                                reason.as_str(),
+                                1.0,
+                            );
+                            r.instant(
+                                "serve",
+                                "drop",
+                                PID_VIRTUAL,
+                                e as u32,
+                                now,
+                                reason.as_str(),
+                                req.id,
+                            );
+                        }
                         finished.fetch_add(1, Ordering::SeqCst);
                     }
                     Some(a) => {
@@ -447,6 +559,8 @@ impl ServingSystem {
             .unwrap_or_else(|arc| arc.lock().unwrap().clone());
         m.total_requests = cfg.total_requests as u64;
         m.wall_ms = clock.now_ms();
+        // Every generated request must be accounted for exactly once.
+        m.check_conservation().map_err(anyhow::Error::msg)?;
         Ok(m)
     }
 
@@ -497,6 +611,18 @@ impl ServingSystem {
         if a.candidate.server.0 == cloud_id {
             estimator.observe(realized_bw);
         }
+        if let Some(r) = self.recorder.as_deref().filter(|r| r.is_enabled()) {
+            r.span(
+                "serve",
+                "transfer",
+                PID_VIRTUAL,
+                a.candidate.server.0 as u32,
+                clock.now_ms(),
+                delay_ms,
+                job.request_id,
+            );
+            r.add("edgeus_serve_transfers_total", 1.0);
+        }
         transfers.push(std::thread::spawn(move || {
             clock.sleep_ms(delay_ms);
             target.submit(job);
@@ -510,6 +636,9 @@ pub struct TestbedExperiment {
     pub base: ServingConfig,
     pub policies: Vec<String>,
     pub loads: Vec<usize>,
+    /// Optional recorder, attached to the first run of the sweep (tracing
+    /// every run would interleave unrelated sweeps in one trace).
+    pub recorder: Option<Arc<Recorder>>,
 }
 
 impl Default for TestbedExperiment {
@@ -523,6 +652,7 @@ impl Default for TestbedExperiment {
                 "offload-all".into(),
             ],
             loads: vec![60, 120, 240, 360],
+            recorder: None,
         }
     }
 }
@@ -546,6 +676,7 @@ impl TestbedExperiment {
         let mut peer = crate::metrics::Series::new("requests", "offloaded to peers (%)", xs);
         let nan = vec![f64::NAN; self.loads.len()];
         let mut raw = Vec::new();
+        let mut recorder = self.recorder.clone();
         for policy in &self.policies {
             let mut s = Vec::new();
             let mut l = Vec::new();
@@ -555,7 +686,11 @@ impl TestbedExperiment {
                 let mut cfg = self.base.clone();
                 cfg.scheduler = policy.clone();
                 cfg.total_requests = load;
-                let metrics = ServingSystem::new(cfg)?.run()?;
+                let mut system = ServingSystem::new(cfg)?;
+                if let Some(r) = recorder.take() {
+                    system = system.with_recorder(r);
+                }
+                let metrics = system.run()?;
                 s.push(metrics.satisfied_pct());
                 l.push(metrics.local_pct());
                 c.push(metrics.cloud_pct());

@@ -135,6 +135,9 @@ impl Drop for InferenceHandle {
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub request_id: u64,
+    /// Simulated arrival time at the covering edge (ms) — lets the
+    /// collector emit a full arrival→reply trace span.
+    pub arrival_sim_ms: f64,
     /// Simulated end-to-end completion time (arrival → logits), ms.
     pub completion_ms: f64,
     /// Profile accuracy of the tier that served it (percent).
@@ -235,6 +238,7 @@ impl ServerNode {
                         inflight.fetch_sub(1, Ordering::SeqCst);
                         let _ = completions.send(Completion {
                             request_id: job.request_id,
+                            arrival_sim_ms: job.arrival_sim_ms,
                             completion_ms,
                             accuracy_pct: job.accuracy_pct,
                             inference_real_ms: infer_ms,

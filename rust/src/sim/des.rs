@@ -21,10 +21,12 @@
 //! a per-frame time series ([`FrameSample`]) of satisfaction, queue depth
 //! and capacity utilization.
 
+use crate::coordinator::explain::{explain_schedule, Outcome};
 use crate::coordinator::{Scheduler, Schedule};
 use crate::model::request::Request;
 use crate::model::service::ServiceId;
 use crate::model::{Placement, ProblemInstance, ServiceCatalog, Topology};
+use crate::obs::{DropReason, Recorder, PID_VIRTUAL, PID_WALL};
 use crate::sim::queueing::AdmissionQueue;
 use crate::util::rng::Rng;
 use crate::util::stats::{Accumulator, Histogram};
@@ -33,6 +35,8 @@ use crate::workload::ScenarioParams;
 use crate::workload::WorkloadParams;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Configuration of one DES run.
 #[derive(Clone, Debug)]
@@ -92,6 +96,42 @@ pub struct FrameSample {
     pub events_applied: u64,
 }
 
+/// Per-frame decision explanation, populated only when the DES runs
+/// with an **enabled** [`Recorder`] — so sweeps can answer "why did
+/// satisfaction dip at frame k" without replaying. One entry per
+/// decision (including queue-full-triggered ones).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrameExplain {
+    /// Virtual time of the decision (ms).
+    pub t_ms: f64,
+    /// 1-based decision index (matches `DesReport::decisions`).
+    pub decision: u64,
+    /// Requests drained into this frame's instance.
+    pub requests: u64,
+    pub served: u64,
+    /// Candidates the scheduler had to choose from, summed over requests.
+    pub candidates_considered: u64,
+    pub drop_deadline_infeasible: u64,
+    pub drop_capacity_exhausted: u64,
+    pub drop_server_down: u64,
+    pub drop_policy: u64,
+    /// Wall-clock time the policy spent scheduling this frame (µs).
+    pub schedule_wall_us: f64,
+    /// Event-calendar depth after the decision committed.
+    pub calendar_depth: u64,
+    /// Scenario events applied at this boundary.
+    pub events_applied: u64,
+}
+
+impl FrameExplain {
+    pub fn total_drops(&self) -> u64 {
+        self.drop_deadline_infeasible
+            + self.drop_capacity_exhausted
+            + self.drop_server_down
+            + self.drop_policy
+    }
+}
+
 /// Aggregate outcome of one DES run.
 #[derive(Clone, Debug, Default)]
 pub struct DesReport {
@@ -115,6 +155,9 @@ pub struct DesReport {
     /// Per-decision time series (one entry per decision boundary,
     /// including queue-full-triggered ones).
     pub frames: Vec<FrameSample>,
+    /// Per-frame decision explanations; empty unless the run had an
+    /// enabled [`Recorder`] (keeps default reports byte-identical).
+    pub explain: Vec<FrameExplain>,
 }
 
 impl DesReport {
@@ -138,13 +181,15 @@ impl DesReport {
 
     /// Serialize the full report (counters + per-frame series) as JSON.
     /// Same seed + same config ⇒ byte-identical output — the determinism
-    /// tests compare these dumps directly.
+    /// tests compare these dumps directly. (With an enabled recorder an
+    /// `explain` block is added, whose `schedule_wall_us` is wall-clock;
+    /// byte-stability is only guaranteed for recorder-off runs.)
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         // NaN is not representable in JSON; empty accumulators report 0.
         let num = |x: f64| Json::num(if x.is_finite() { x } else { 0.0 });
         let count = |x: u64| Json::num(x as f64);
-        Json::obj(vec![
+        let mut fields = vec![
             ("generated", count(self.generated)),
             ("served", count(self.served)),
             ("satisfied", count(self.satisfied)),
@@ -177,13 +222,67 @@ impl DesReport {
                     ])
                 })),
             ),
-        ])
+        ];
+        if !self.explain.is_empty() {
+            fields.push((
+                "explain",
+                Json::arr(self.explain.iter().map(|e| {
+                    Json::obj(vec![
+                        ("t_ms", num(e.t_ms)),
+                        ("decision", count(e.decision)),
+                        ("requests", count(e.requests)),
+                        ("served", count(e.served)),
+                        ("candidates_considered", count(e.candidates_considered)),
+                        ("drop_deadline_infeasible", count(e.drop_deadline_infeasible)),
+                        ("drop_capacity_exhausted", count(e.drop_capacity_exhausted)),
+                        ("drop_server_down", count(e.drop_server_down)),
+                        ("drop_policy", count(e.drop_policy)),
+                        ("schedule_wall_us", num(e.schedule_wall_us)),
+                        ("calendar_depth", count(e.calendar_depth)),
+                        ("events_applied", count(e.events_applied)),
+                    ])
+                })),
+            ));
+        }
+        Json::obj(fields)
+    }
+
+    /// Render the per-frame decision explanations as a markdown table
+    /// (empty string when the run had no enabled recorder).
+    pub fn explain_markdown(&self) -> String {
+        if self.explain.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "| frame | t (ms) | reqs | served | cands | deadline | capacity | down | policy | sched (µs) | cal depth | events |\n\
+             |---|---|---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for e in &self.explain {
+            out.push_str(&format!(
+                "| {} | {:.0} | {} | {} | {} | {} | {} | {} | {} | {:.1} | {} | {} |\n",
+                e.decision,
+                e.t_ms,
+                e.requests,
+                e.served,
+                e.candidates_considered,
+                e.drop_deadline_infeasible,
+                e.drop_capacity_exhausted,
+                e.drop_server_down,
+                e.drop_policy,
+                e.schedule_wall_us,
+                e.calendar_depth,
+                e.events_applied,
+            ));
+        }
+        out
     }
 }
 
 /// A request waiting for a decision.
 #[derive(Clone, Debug)]
 struct Pending {
+    /// 1-based arrival index; correlates trace spans with instants.
+    id: u64,
     service: ServiceId,
     a_min: f64,
     c_max: f64,
@@ -204,6 +303,7 @@ enum Event {
         c_max: f64,
         arrival_ms: f64,
         kind: u8, // 0 local, 1 cloud, 2 peer
+        id: u64,
     },
 }
 
@@ -236,14 +336,32 @@ impl PartialOrd for Entry {
 pub struct Des<'a> {
     cfg: DesConfig,
     scheduler: &'a (dyn Scheduler + Send + Sync),
+    recorder: Option<Arc<Recorder>>,
 }
 
 impl<'a> Des<'a> {
     pub fn new(cfg: DesConfig, scheduler: &'a (dyn Scheduler + Send + Sync)) -> Des<'a> {
-        Des { cfg, scheduler }
+        Des { cfg, scheduler, recorder: None }
+    }
+
+    /// Attach an observability recorder. A disabled recorder keeps the
+    /// run (and its report bytes) identical to a recorder-less run; an
+    /// enabled one additionally populates [`DesReport::explain`].
+    pub fn with_recorder(mut self, recorder: Arc<Recorder>) -> Des<'a> {
+        self.recorder = Some(recorder);
+        self
     }
 
     pub fn run(&self) -> DesReport {
+        // `obs` is Some only for an *enabled* recorder: the hot loop
+        // pays one `if let` test per site when observability is off.
+        let obs = self.recorder.as_deref().filter(|r| r.is_enabled());
+        let wall_t0 = Instant::now();
+        if let Some(r) = obs {
+            for reason in DropReason::ALL {
+                r.declare("edgeus_des_dropped_total", "reason", reason.as_str());
+            }
+        }
         let mut rng = Rng::new(self.cfg.seed);
         let mut topology = Topology::paper_default(&self.cfg.scenario.topology, &mut rng);
         let catalog = ServiceCatalog::synthetic(&self.cfg.scenario.catalog, &mut rng);
@@ -295,6 +413,7 @@ impl<'a> Des<'a> {
                             None => rng.index(edges.len()),
                         };
                         let pending = Pending {
+                            id: report.generated,
                             service: ServiceId(rng.index(catalog.num_services)),
                             a_min: rng.normal_clamped(
                                 wl.accuracy_mean_pct,
@@ -313,6 +432,16 @@ impl<'a> Des<'a> {
                         };
                         let queue = &mut queues[edge_pos];
                         let was_admitted = queue.push(pending, now);
+                        if let Some(r) = obs {
+                            let track = edges[edge_pos].0 as u32;
+                            r.add("edgeus_des_generated_total", 1.0);
+                            r.instant("des", "arrival", PID_VIRTUAL, track, now, "", report.generated);
+                            if !was_admitted {
+                                let reason = DropReason::QueueFull.as_str();
+                                r.add_labeled("edgeus_des_dropped_total", "reason", reason, 1.0);
+                                r.instant("des", "drop", PID_VIRTUAL, track, now, reason, report.generated);
+                            }
+                        }
                         if !was_admitted {
                             report.rejected_at_queue += 1;
                         } else if queue.is_full() {
@@ -334,22 +463,35 @@ impl<'a> Des<'a> {
                     report.decisions += 1;
                     // Scenario events apply at frame boundaries, before
                     // the drain — the scheduler sees the mutated world.
+                    let apply_w0 = obs.map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
                     let events_applied = match engine.as_mut() {
-                        Some(e) => e.advance(now, &mut topology, &mut placement),
+                        Some(e) => e.advance_traced(now, &mut topology, &mut placement, obs),
                         None => 0,
                     };
+                    if let Some(r) = obs {
+                        let t0 = apply_w0.unwrap_or(0.0);
+                        let t1 = wall_t0.elapsed().as_secs_f64() * 1e3;
+                        r.span("des", "frame.apply", PID_WALL, 0, t0, t1 - t0, report.decisions);
+                    }
                     let queue_depth: u64 = queues.iter().map(|q| q.len() as u64).sum();
                     for q in &queues {
                         report.queue_len.push(q.len() as f64);
                     }
+                    let drain_w0 = obs.map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
                     let mut drained: Vec<(usize, Pending, f64)> = Vec::new();
                     for (pos, q) in queues.iter_mut().enumerate() {
                         for (p, tq) in q.drain(now) {
                             drained.push((pos, p, tq));
                         }
                     }
+                    if let Some(r) = obs {
+                        let t0 = drain_w0.unwrap_or(0.0);
+                        let t1 = wall_t0.elapsed().as_secs_f64() * 1e3;
+                        r.span("des", "frame.drain", PID_WALL, 0, t0, t1 - t0, report.decisions);
+                    }
+                    let mut decided = None;
                     if !drained.is_empty() {
-                        self.decide(
+                        decided = self.decide(
                             now,
                             &drained,
                             &topology,
@@ -362,6 +504,7 @@ impl<'a> Des<'a> {
                             &mut calendar,
                             &mut seq,
                             &mut push,
+                            obs.is_some(),
                         );
                     }
                     // Per-frame sample, after the decision committed its
@@ -398,6 +541,57 @@ impl<'a> Des<'a> {
                         },
                         events_applied,
                     });
+                    if let Some(r) = obs {
+                        r.sample("edgeus_des_queue_depth", PID_VIRTUAL, 0, now, queue_depth as f64);
+                        r.sample(
+                            "edgeus_des_calendar_depth",
+                            PID_VIRTUAL,
+                            0,
+                            now,
+                            calendar.len() as f64,
+                        );
+                        let mut fe = FrameExplain {
+                            t_ms: now,
+                            decision: report.decisions,
+                            calendar_depth: calendar.len() as u64,
+                            events_applied,
+                            ..FrameExplain::default()
+                        };
+                        if let Some((inst, schedule, wall_us)) = &decided {
+                            let ex = explain_schedule(inst, schedule);
+                            fe.requests = schedule.slots.len() as u64;
+                            fe.served = schedule.served() as u64;
+                            fe.candidates_considered = ex.candidates_considered;
+                            fe.drop_deadline_infeasible = ex.drops(DropReason::DeadlineInfeasible);
+                            fe.drop_capacity_exhausted = ex.drops(DropReason::CapacityExhausted);
+                            fe.drop_server_down = ex.drops(DropReason::ServerDown);
+                            fe.drop_policy = ex.drops(DropReason::Policy);
+                            fe.schedule_wall_us = *wall_us;
+                            r.add("edgeus_des_candidates_total", ex.candidates_considered as f64);
+                            for (oc, (edge_pos, p, tq)) in ex.outcomes.iter().zip(drained.iter()) {
+                                let track = edges[*edge_pos].0 as u32;
+                                match oc.outcome {
+                                    Outcome::Served { server, offloaded, .. } => {
+                                        let kind = if !offloaded {
+                                            "local"
+                                        } else if inst.topology.servers[server].is_cloud() {
+                                            "cloud"
+                                        } else {
+                                            "peer"
+                                        };
+                                        r.span("des", "queue", PID_VIRTUAL, track, p.arrival_ms, *tq, p.id);
+                                        r.add_labeled("edgeus_des_assigned_total", "kind", kind, 1.0);
+                                    }
+                                    Outcome::Dropped(reason) => {
+                                        let label = reason.as_str();
+                                        r.add_labeled("edgeus_des_dropped_total", "reason", label, 1.0);
+                                        r.instant("des", "drop", PID_VIRTUAL, track, now, label, p.id);
+                                    }
+                                }
+                            }
+                        }
+                        report.explain.push(fe);
+                    }
                     // Next frame while work can still arrive or drain.
                     if now < self.cfg.horizon_ms + 10.0 * self.cfg.frame_ms {
                         push(
@@ -416,6 +610,7 @@ impl<'a> Des<'a> {
                     c_max,
                     arrival_ms,
                     kind,
+                    id,
                 } => {
                     busy[server] -= comp_cost;
                     let total = now - arrival_ms;
@@ -427,8 +622,16 @@ impl<'a> Des<'a> {
                         1 => report.cloud += 1,
                         _ => report.peer += 1,
                     }
-                    if accuracy >= a_min && total <= c_max {
+                    let ok = accuracy >= a_min && total <= c_max;
+                    if ok {
                         report.satisfied += 1;
+                    }
+                    if let Some(r) = obs {
+                        r.span("des", "serve", PID_VIRTUAL, server as u32, arrival_ms, total, id);
+                        r.add("edgeus_des_served_total", 1.0);
+                        if ok {
+                            r.add("edgeus_des_satisfied_total", 1.0);
+                        }
                     }
                 }
             }
@@ -436,6 +639,9 @@ impl<'a> Des<'a> {
         report
     }
 
+    /// Run one decision frame. Returns the instance, schedule, and the
+    /// policy's wall-clock µs when `obs_on` (for post-hoc explanation);
+    /// `None` otherwise so the hot path allocates nothing extra.
     #[allow(clippy::too_many_arguments)]
     fn decide(
         &self,
@@ -451,7 +657,8 @@ impl<'a> Des<'a> {
         calendar: &mut BinaryHeap<Reverse<Entry>>,
         seq: &mut u64,
         push: &mut impl FnMut(&mut BinaryHeap<Reverse<Entry>>, &mut u64, f64, Event),
-    ) {
+        obs_on: bool,
+    ) -> Option<(ProblemInstance, Schedule, f64)> {
         // Residual-capacity topology for this frame: γ minus in-service
         // work; η resets each frame (per-frame forwarding budget).
         let mut frame_topology = topology.clone();
@@ -475,7 +682,9 @@ impl<'a> Des<'a> {
             requests,
         )
         .with_normalization(100.0, self.cfg.scenario.workload.max_completion_ms);
+        let sched_t0 = if obs_on { Some(Instant::now()) } else { None };
         let schedule: Schedule = self.scheduler.schedule(&inst, rng);
+        let schedule_wall_us = sched_t0.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
 
         for (i, (_, p, tq)) in drained.iter().enumerate() {
             match &schedule.slots[i] {
@@ -506,10 +715,16 @@ impl<'a> Des<'a> {
                             c_max: p.c_max,
                             arrival_ms: p.arrival_ms,
                             kind,
+                            id: p.id,
                         },
                     );
                 }
             }
+        }
+        if obs_on {
+            Some((inst, schedule, schedule_wall_us))
+        } else {
+            None
         }
     }
 }
@@ -670,5 +885,64 @@ mod tests {
         assert_eq!(series.policies.len(), 2);
         let gus = &series.policies[0].1;
         assert!(gus[1] <= gus[0] + 1e-9);
+    }
+
+    #[test]
+    fn disabled_recorder_keeps_report_byte_identical() {
+        let gus = Gus::default();
+        let plain = Des::new(quick_cfg(3.0), &gus).run();
+        let rec = Arc::new(Recorder::disabled());
+        let with_disabled = Des::new(quick_cfg(3.0), &gus).with_recorder(rec.clone()).run();
+        assert!(with_disabled.explain.is_empty());
+        assert_eq!(rec.total_events(), 0);
+        assert_eq!(plain.to_json().dump(), with_disabled.to_json().dump());
+    }
+
+    #[test]
+    fn enabled_recorder_does_not_change_outcomes_and_explains_frames() {
+        let gus = Gus::default();
+        let plain = Des::new(quick_cfg(150.0), &gus).run();
+        let rec = Arc::new(Recorder::enabled(1 << 14));
+        let traced = Des::new(quick_cfg(150.0), &gus).with_recorder(rec.clone()).run();
+        // Observation must not perturb the simulation.
+        assert_eq!(plain.generated, traced.generated);
+        assert_eq!(plain.served, traced.served);
+        assert_eq!(plain.satisfied, traced.satisfied);
+        assert_eq!(plain.dropped, traced.dropped);
+        assert_eq!(plain.rejected_at_queue, traced.rejected_at_queue);
+        // One explanation per decision, and reasons account for every
+        // scheduler drop.
+        assert_eq!(traced.explain.len(), traced.decisions as usize);
+        let explained_drops: u64 = traced.explain.iter().map(|e| e.total_drops()).sum();
+        assert_eq!(explained_drops, traced.dropped);
+        let explained_served: u64 = traced.explain.iter().map(|e| e.served).sum();
+        assert_eq!(explained_served, traced.served);
+        // Recorder counters agree with the report.
+        assert_eq!(
+            rec.counter_value("edgeus_des_generated_total", "", "") as u64,
+            traced.generated
+        );
+        assert_eq!(
+            rec.counter_value("edgeus_des_served_total", "", "") as u64,
+            traced.served
+        );
+        assert_eq!(
+            rec.counter_value(
+                "edgeus_des_dropped_total",
+                "reason",
+                DropReason::QueueFull.as_str()
+            ) as u64,
+            traced.rejected_at_queue
+        );
+        let scheduler_drops: f64 = DropReason::ALL
+            .iter()
+            .filter(|r| **r != DropReason::QueueFull)
+            .map(|r| rec.counter_value("edgeus_des_dropped_total", "reason", r.as_str()))
+            .sum();
+        assert_eq!(scheduler_drops as u64, traced.dropped);
+        // The instrumented report serializes with an explain block.
+        let dump = traced.to_json().dump();
+        assert!(dump.contains("\"explain\""));
+        assert!(!traced.explain_markdown().is_empty());
     }
 }

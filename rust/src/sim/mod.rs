@@ -5,6 +5,6 @@ pub mod des;
 pub mod montecarlo;
 pub mod queueing;
 
-pub use des::{Des, DesConfig, DesReport, FrameSample};
+pub use des::{Des, DesConfig, DesReport, FrameExplain, FrameSample};
 pub use montecarlo::{MonteCarlo, PolicyStats};
 pub use queueing::{AdmissionQueue, FrameClock};

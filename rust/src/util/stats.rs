@@ -262,4 +262,60 @@ mod tests {
         assert_eq!(bounds[..3], [1.0, 10.0, 100.0]);
         assert!(bounds[3].is_infinite());
     }
+
+    #[test]
+    fn histogram_quantile_empty_is_nan() {
+        let h = Histogram::new(vec![10.0, 100.0]);
+        for q in [0.0, 0.5, 1.0] {
+            assert!(h.quantile(q).is_nan(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_q0_is_first_nonempty_bucket() {
+        // q = 0 gives target 0, bumped to 1 — the first occupied bucket.
+        let mut h = Histogram::new(vec![10.0, 100.0, 1000.0]);
+        h.record(50.0);
+        h.record(60.0);
+        assert_eq!(h.quantile(0.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_quantile_q1_is_containing_bucket_bound() {
+        // q = 1 resolves to the upper bound of the bucket holding the
+        // last record — not the exact max — unless the mass overflows.
+        let mut h = Histogram::new(vec![10.0, 100.0]);
+        h.record(3.0);
+        h.record(7.0);
+        assert_eq!(h.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_quantile_overflow_bucket_returns_max() {
+        let mut h = Histogram::new(vec![10.0]);
+        h.record(5000.0);
+        assert_eq!(h.quantile(0.5), 5000.0);
+        assert_eq!(h.quantile(1.0), 5000.0);
+    }
+
+    #[test]
+    fn histogram_quantile_clamps_out_of_range_q() {
+        let mut h = Histogram::new(vec![10.0, 100.0, 1000.0]);
+        h.record(5.0);
+        h.record(500.0);
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn histogram_quantile_single_bucket_mass_is_flat() {
+        // All mass in one bucket: every quantile is that bucket's bound.
+        let mut h = Histogram::new(vec![10.0, 100.0, 1000.0]);
+        for _ in 0..5 {
+            h.record(50.0);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(h.quantile(q), 100.0, "q={q}");
+        }
+    }
 }

@@ -1,0 +1,139 @@
+//! Integration tests for the observability layer: an instrumented DES run
+//! exports a parseable Chrome trace and Prometheus text whose counters
+//! agree with the report; a disabled recorder leaves the report
+//! byte-identical to an uninstrumented run; scenario world events show up
+//! as trace markers.
+
+use edgeus::coordinator::gus::Gus;
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::obs::{chrome_trace, prometheus, DropReason, Recorder};
+use edgeus::scenario::{EventKind, Script, ScriptedEvent};
+use edgeus::sim::{Des, DesConfig};
+use edgeus::util::json::Json;
+use edgeus::workload::{ScenarioParams, WorkloadParams};
+use std::sync::Arc;
+
+/// Small but non-trivial world: enough load that drops occur, short
+/// enough that the suite stays fast.
+fn cfg(rate: f64) -> DesConfig {
+    DesConfig {
+        scenario: ScenarioParams {
+            topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
+            workload: WorkloadParams::default(),
+        },
+        horizon_ms: 20_000.0,
+        arrival_rate_per_s: rate,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn chrome_trace_round_trips_and_counts_requests() {
+    let gus = Gus::default();
+    let recorder = Arc::new(Recorder::enabled(1 << 14));
+    let report = Des::new(cfg(30.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+
+    let trace = chrome_trace(&recorder);
+    let dump = trace.dump();
+    let parsed = Json::parse(&dump).expect("chrome trace must be valid JSON");
+    assert_eq!(parsed.dump(), dump, "round-trip through the in-tree parser");
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(events.len() > 2, "expected events beyond process metadata");
+    // Every event carries the Chrome trace-event required keys.
+    for e in events {
+        assert!(e.get("ph").as_str().is_some(), "event missing ph: {e:?}");
+        assert!(e.get("pid").as_f64().is_some(), "event missing pid: {e:?}");
+    }
+    // Counters in the recorder agree with the report's totals.
+    assert_eq!(
+        recorder.counter_value("edgeus_des_generated_total", "", "") as u64,
+        report.generated
+    );
+    assert_eq!(
+        recorder.counter_value("edgeus_des_served_total", "", "") as u64,
+        report.served
+    );
+}
+
+#[test]
+fn prometheus_export_carries_drop_reasons() {
+    let gus = Gus::default();
+    let recorder = Arc::new(Recorder::enabled(1 << 14));
+    // Overload hard so scheduler drops are guaranteed.
+    let report = Des::new(cfg(150.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+    assert!(report.dropped + report.rejected_at_queue > 0, "overload must drop");
+
+    let text = prometheus(&recorder);
+    assert!(text.contains("# TYPE edgeus_des_generated_total counter"));
+    // All five reasons are pre-declared, so the labels are always present
+    // (the CI smoke step greps for this).
+    for reason in DropReason::ALL {
+        assert!(
+            text.contains(&format!("reason=\"{}\"", reason.as_str())),
+            "missing reason {} in:\n{text}",
+            reason.as_str()
+        );
+    }
+    // The per-reason counters sum to the report's drop totals.
+    let explained: u64 = DropReason::ALL
+        .iter()
+        .map(|r| {
+            recorder.counter_value("edgeus_des_dropped_total", "reason", r.as_str()) as u64
+        })
+        .sum();
+    assert_eq!(explained, report.dropped + report.rejected_at_queue);
+}
+
+#[test]
+fn disabled_recorder_is_byte_identical_to_absent() {
+    let gus = Gus::default();
+    let plain = Des::new(cfg(30.0), &gus).run();
+    let recorder = Arc::new(Recorder::disabled());
+    let traced = Des::new(cfg(30.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+    assert_eq!(plain.to_json().dump(), traced.to_json().dump());
+    assert_eq!(recorder.total_events(), 0);
+    assert!(traced.explain.is_empty(), "explanations only with an enabled recorder");
+}
+
+#[test]
+fn scenario_events_become_trace_markers() {
+    let gus = Gus::default();
+    let mut c = cfg(10.0);
+    c.script = Some(Script::new(
+        "obs-test",
+        vec![
+            ScriptedEvent { at_ms: 5_000.0, kind: EventKind::ServerDown { server: 0 } },
+            ScriptedEvent { at_ms: 12_000.0, kind: EventKind::ServerUp { server: 0 } },
+        ],
+    ));
+    let recorder = Arc::new(Recorder::enabled(1 << 14));
+    let _ = Des::new(c, &gus).with_recorder(Arc::clone(&recorder)).run();
+    let names: Vec<&str> = recorder
+        .events()
+        .iter()
+        .filter(|e| e.cat == "scenario")
+        .map(|e| e.name)
+        .collect();
+    assert_eq!(names, vec!["server_down", "server_up"]);
+    assert_eq!(
+        recorder.counter_value("edgeus_scenario_events_total", "kind", "server_down"),
+        1.0
+    );
+}
+
+#[test]
+fn explanations_cover_every_decision_frame() {
+    let gus = Gus::default();
+    let recorder = Arc::new(Recorder::enabled(1 << 14));
+    let report = Des::new(cfg(150.0), &gus).with_recorder(recorder).run();
+    assert_eq!(report.explain.len() as u64, report.decisions);
+    let explained_drops: u64 = report.explain.iter().map(|f| f.total_drops()).sum();
+    assert_eq!(explained_drops, report.dropped);
+    let md = report.explain_markdown();
+    assert!(md.contains("| t (ms) |"), "markdown table header:\n{md}");
+    // The JSON report gains an "explain" array only when instrumented.
+    let j = report.to_json().dump();
+    assert!(j.contains("\"explain\""));
+}
