@@ -137,7 +137,7 @@ fn ablation_cloud_sizing() {
         for run in 0..runs() {
             let mut rng = Rng::new(13 ^ (run as u64).wrapping_mul(0x9E37));
             let mut inst = build_instance(&ScenarioParams::default(), &mut rng);
-            for s in &mut inst.topology.servers {
+            for s in &mut inst.topology.to_mut().servers {
                 if s.is_cloud() {
                     s.gamma *= scale;
                     s.eta *= scale;

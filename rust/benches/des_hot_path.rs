@@ -1,0 +1,197 @@
+//! Bench + CI gate for the allocation-free DES hot path.
+//!
+//! For each offered-load point (low / mid / high), runs the same seeded
+//! simulation twice — `Des::run` (pooled, borrowed frame instances) and
+//! `Des::run_reference` (the pre-pooling clone-the-world oracle) — and
+//! reports simulated request throughput, wall-time per decision frame,
+//! and the pooled-vs-reference speedup. Results are written to
+//! `BENCH_des.json` (CI uploads it as an artifact; committing that
+//! artifact refreshes the regression baseline).
+//!
+//! Gates (exit code 1 on failure):
+//!   * regression — if a measured baseline exists at
+//!     `EDGEUS_BENCH_BASELINE` (default `BENCH_des.json`), pooled
+//!     wall-time per decision frame must not regress more than 25%
+//!     at any rate;
+//!   * speedup — with `EDGEUS_BENCH_GATE_SPEEDUP=1`, the pooled path
+//!     must be ≥3× the reference throughput at the highest rate.
+//!
+//! Scale knobs:
+//!   EDGEUS_BENCH_RATES     comma list of offered loads (default
+//!                          1000,10000,100000 req/s)
+//!   EDGEUS_BENCH_HORIZON_S virtual horizon per run (default 10)
+//!   EDGEUS_BENCH_ITERS     timed iterations per case (default 5)
+//!   EDGEUS_BENCH_SMOKE     =1 shrinks horizon/iters for PR CI
+//!   EDGEUS_BENCH_OUT       output path (default BENCH_des.json)
+
+use edgeus::benchkit::{report, Bencher};
+use edgeus::coordinator::scheduler_by_name;
+use edgeus::sim::{Des, DesConfig};
+use edgeus::util::json::Json;
+
+struct RatePoint {
+    rate: f64,
+    generated: u64,
+    decisions: u64,
+    pooled_ms: f64,
+    reference_ms: f64,
+    sim_req_per_s: f64,
+    wall_us_per_frame: f64,
+    speedup: f64,
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let smoke = std::env::var("EDGEUS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let horizon_s = env_f64("EDGEUS_BENCH_HORIZON_S", if smoke { 3.0 } else { 10.0 });
+    let iters = env_f64("EDGEUS_BENCH_ITERS", if smoke { 3.0 } else { 5.0 }) as usize;
+    let rates: Vec<f64> = std::env::var("EDGEUS_BENCH_RATES")
+        .ok()
+        .map(|s| s.split(',').filter_map(|x| x.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![1_000.0, 10_000.0, 100_000.0]);
+
+    let scheduler = scheduler_by_name("gus").expect("gus scheduler");
+    let mut points = Vec::with_capacity(rates.len());
+    let mut tables = Vec::new();
+
+    for &rate in &rates {
+        let cfg = DesConfig {
+            horizon_ms: horizon_s * 1e3,
+            arrival_rate_per_s: rate,
+            ..Default::default()
+        };
+        let probe = Des::new(cfg.clone(), scheduler.as_ref()).run();
+        let bencher = Bencher::new(1, iters).with_items(probe.generated as f64);
+        let pooled = {
+            let cfg = cfg.clone();
+            bencher.run(&format!("pooled_{rate}rps"), || {
+                Des::new(cfg.clone(), scheduler.as_ref()).run().served
+            })
+        };
+        let reference = {
+            let cfg = cfg.clone();
+            bencher.run(&format!("reference_{rate}rps"), || {
+                Des::new(cfg.clone(), scheduler.as_ref()).run_reference().served
+            })
+        };
+        let point = RatePoint {
+            rate,
+            generated: probe.generated,
+            decisions: probe.decisions,
+            pooled_ms: pooled.mean_ms,
+            reference_ms: reference.mean_ms,
+            sim_req_per_s: probe.generated as f64 / (pooled.mean_ms / 1e3).max(1e-12),
+            wall_us_per_frame: pooled.mean_ms * 1e3 / probe.decisions.max(1) as f64,
+            speedup: reference.mean_ms / pooled.mean_ms.max(1e-12),
+        };
+        tables.push(report(
+            &format!("des_hot_path @ {rate} req/s offered (items = generated requests)"),
+            &[pooled, reference],
+        ));
+        points.push(point);
+    }
+
+    for t in &tables {
+        println!("{t}");
+    }
+    println!("| rate (req/s) | generated | decisions | sim req/s | wall µs/frame | speedup vs reference |");
+    println!("|---|---|---|---|---|---|");
+    for p in &points {
+        println!(
+            "| {} | {} | {} | {:.0} | {:.1} | {:.2}x |",
+            p.rate, p.generated, p.decisions, p.sim_req_per_s, p.wall_us_per_frame, p.speedup
+        );
+    }
+
+    // Emit BENCH_des.json.
+    let out_path =
+        std::env::var("EDGEUS_BENCH_OUT").unwrap_or_else(|_| "BENCH_des.json".to_string());
+    let baseline_path =
+        std::env::var("EDGEUS_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_des.json".to_string());
+    // Read the committed baseline BEFORE overwriting the output file
+    // (default config points both at the same path).
+    let baseline = std::fs::read_to_string(&baseline_path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok());
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("des_hot_path")),
+        ("status", Json::str("measured")),
+        ("policy", Json::str("gus")),
+        ("horizon_s", Json::num(horizon_s)),
+        ("iters", Json::num(iters as f64)),
+        ("smoke", Json::num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "rates",
+            Json::arr(points.iter().map(|p| {
+                Json::obj(vec![
+                    ("rate_per_s", Json::num(p.rate)),
+                    ("generated", Json::num(p.generated as f64)),
+                    ("decisions", Json::num(p.decisions as f64)),
+                    ("pooled_wall_ms", Json::num(p.pooled_ms)),
+                    ("reference_wall_ms", Json::num(p.reference_ms)),
+                    ("sim_req_per_s", Json::num(p.sim_req_per_s)),
+                    ("wall_us_per_frame", Json::num(p.wall_us_per_frame)),
+                    ("speedup_vs_reference", Json::num(p.speedup)),
+                ])
+            })),
+        ),
+    ]);
+    std::fs::write(&out_path, json.dump()).expect("write BENCH_des.json");
+    println!("\nwrote {out_path}");
+
+    let mut failed = false;
+
+    // Gate 1: wall-time per decision frame vs the committed baseline.
+    match baseline {
+        Some(b) if b.get("status").as_str() == Some("measured") => {
+            for p in &points {
+                let base = b
+                    .get("rates")
+                    .as_arr()
+                    .into_iter()
+                    .flatten()
+                    .find(|r| r.get("rate_per_s").as_f64() == Some(p.rate))
+                    .and_then(|r| r.get("wall_us_per_frame").as_f64());
+                match base {
+                    Some(base_us) if base_us > 0.0 => {
+                        let delta = 100.0 * (p.wall_us_per_frame - base_us) / base_us;
+                        println!(
+                            "gate: {} req/s wall/frame {:.1}µs vs baseline {:.1}µs ({delta:+.1}%)",
+                            p.rate, p.wall_us_per_frame, base_us
+                        );
+                        if delta > 25.0 {
+                            eprintln!("FAIL: >25% frame wall-time regression at {} req/s", p.rate);
+                            failed = true;
+                        }
+                    }
+                    _ => println!("gate: no baseline entry for {} req/s, skipping", p.rate),
+                }
+            }
+        }
+        _ => println!("gate: no measured baseline at {baseline_path}, regression gate skipped"),
+    }
+
+    // Gate 2: the tentpole's throughput claim, at the highest rate.
+    let gate_speedup =
+        std::env::var("EDGEUS_BENCH_GATE_SPEEDUP").map(|v| v == "1").unwrap_or(false);
+    if let Some(top) = points.last() {
+        println!(
+            "speedup at {} req/s: {:.2}x (target ≥3x{})",
+            top.rate,
+            top.speedup,
+            if gate_speedup { ", enforced" } else { "" }
+        );
+        if gate_speedup && top.speedup < 3.0 {
+            eprintln!("FAIL: pooled hot path is <3x the reference at the highest load");
+            failed = true;
+        }
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+}

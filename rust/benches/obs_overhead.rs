@@ -15,7 +15,6 @@ use edgeus::benchkit::{report, Bencher};
 use edgeus::coordinator::scheduler_by_name;
 use edgeus::obs::Recorder;
 use edgeus::sim::{Des, DesConfig};
-use std::sync::Arc;
 
 fn main() {
     let horizon_s: f64 = std::env::var("EDGEUS_BENCH_HORIZON_S")
@@ -44,18 +43,20 @@ fn main() {
     };
     let disabled = {
         let cfg = cfg.clone();
+        let rec = Recorder::disabled();
         bencher.run("recorder_disabled_64k", || {
             Des::new(cfg.clone(), scheduler.as_ref())
-                .with_recorder(Arc::new(Recorder::disabled()))
+                .with_recorder(&rec)
                 .run()
                 .served
         })
     };
     let enabled = {
         let cfg = cfg.clone();
+        let rec = Recorder::enabled(1 << 16);
         bencher.run("recorder_enabled_64k", || {
             Des::new(cfg.clone(), scheduler.as_ref())
-                .with_recorder(Arc::new(Recorder::enabled(1 << 16)))
+                .with_recorder(&rec)
                 .run()
                 .served
         })

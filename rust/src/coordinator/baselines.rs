@@ -13,28 +13,34 @@ use crate::coordinator::gus::Gus;
 use crate::coordinator::us::{
     qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
 };
-use crate::coordinator::Scheduler;
+use crate::coordinator::{SchedScratch, Scheduler};
 use crate::model::instance::Candidate;
 use crate::model::request::Request;
 use crate::model::{ProblemInstance, ServerId};
 use crate::util::rng::Rng;
 
 /// Rank the QoS-feasible candidates for request `i` restricted to server
-/// `j`, best US first.
-fn ranked_on_server(
+/// `j` into `ranked` (cleared first), best US first. `cands` is the
+/// reusable enumeration buffer.
+fn ranked_on_server_into(
     inst: &ProblemInstance,
     i: usize,
     server: ServerId,
-) -> Vec<(f64, Candidate)> {
+    cands: &mut Vec<Candidate>,
+    ranked: &mut Vec<(f64, Candidate)>,
+) {
+    ranked.clear();
     let req = &inst.requests[i];
-    let mut v: Vec<(f64, Candidate)> = inst
-        .candidates(i)
-        .into_iter()
-        .filter(|c| c.server == server && qos_satisfied(req, c))
-        .map(|c| (user_satisfaction(req, &c, inst.max_accuracy_pct, inst.max_completion_ms), c))
-        .collect();
-    v.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    v
+    inst.candidates_into(i, cands);
+    for &c in cands.iter() {
+        if c.server == server && qos_satisfied(req, &c) {
+            ranked.push((
+                user_satisfaction(req, &c, inst.max_accuracy_pct, inst.max_completion_ms),
+                c,
+            ));
+        }
+    }
+    ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
 }
 
 fn try_assign(
@@ -61,16 +67,22 @@ impl Scheduler for RandomAssignment {
         "random"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
-        let mut schedule = Schedule::empty(inst.num_requests());
-        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        out.reset(inst.num_requests());
+        let SchedScratch { cands, ranked, tracker, .. } = scratch;
+        tracker.reset(inst, ConstraintMode::STRICT);
         for i in 0..inst.num_requests() {
             let req = &inst.requests[i];
             let server = ServerId(rng.index(inst.num_servers()));
-            let ranked = ranked_on_server(inst, i, server);
-            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+            ranked_on_server_into(inst, i, server, cands, ranked);
+            try_assign(out, tracker, req, i, ranked);
         }
-        schedule
     }
 }
 
@@ -82,21 +94,30 @@ impl Scheduler for OffloadAll {
         "offload-all"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
-        let mut schedule = Schedule::empty(inst.num_requests());
-        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        _rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        out.reset(inst.num_requests());
+        let SchedScratch { cands, ranked, ranked_tmp, tracker, .. } = scratch;
+        tracker.reset(inst, ConstraintMode::STRICT);
         let clouds = inst.topology.cloud_ids();
         for i in 0..inst.num_requests() {
             let req = &inst.requests[i];
-            // With several clouds, rank across all of them.
-            let mut ranked: Vec<(f64, Candidate)> = Vec::new();
+            // With several clouds, rank across all of them: concatenate
+            // the per-cloud sorted runs, then stable-sort the whole —
+            // the same tie order as the historical per-cloud extend.
+            ranked.clear();
             for &c in &clouds {
-                ranked.extend(ranked_on_server(inst, i, c));
+                ranked_on_server_into(inst, i, c, cands, ranked_tmp);
+                ranked.extend_from_slice(ranked_tmp);
             }
             ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+            try_assign(out, tracker, req, i, ranked);
         }
-        schedule
     }
 }
 
@@ -108,15 +129,21 @@ impl Scheduler for LocalAll {
         "local-all"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
-        let mut schedule = Schedule::empty(inst.num_requests());
-        let mut tracker = CapacityTracker::new(inst, ConstraintMode::STRICT);
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        _rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        out.reset(inst.num_requests());
+        let SchedScratch { cands, ranked, tracker, .. } = scratch;
+        tracker.reset(inst, ConstraintMode::STRICT);
         for i in 0..inst.num_requests() {
             let req = &inst.requests[i];
-            let ranked = ranked_on_server(inst, i, req.covering);
-            try_assign(&mut schedule, &mut tracker, req, i, &ranked);
+            ranked_on_server_into(inst, i, req.covering, cands, ranked);
+            try_assign(out, tracker, req, i, ranked);
         }
-        schedule
     }
 }
 
@@ -128,8 +155,14 @@ impl Scheduler for HappyComputation {
         "happy-computation"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
-        Gus::with_mode(ConstraintMode::HAPPY_COMPUTATION).schedule(inst, rng)
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        Gus::with_mode(ConstraintMode::HAPPY_COMPUTATION).schedule_into(inst, rng, scratch, out)
     }
 }
 
@@ -141,8 +174,14 @@ impl Scheduler for HappyCommunication {
         "happy-communication"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
-        Gus::with_mode(ConstraintMode::HAPPY_COMMUNICATION).schedule(inst, rng)
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        Gus::with_mode(ConstraintMode::HAPPY_COMMUNICATION).schedule_into(inst, rng, scratch, out)
     }
 }
 
@@ -153,7 +192,7 @@ mod tests {
     use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
     use crate::model::topology::{Topology, TopologyParams};
 
-    fn instance(n: usize, seed: u64) -> ProblemInstance {
+    fn instance(n: usize, seed: u64) -> ProblemInstance<'static> {
         let mut rng = Rng::new(seed);
         let topology = Topology::paper_default(
             &TopologyParams { num_edge: 4, num_cloud: 1, ..Default::default() },

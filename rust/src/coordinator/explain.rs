@@ -68,18 +68,14 @@ pub fn explain_schedule(inst: &ProblemInstance, schedule: &Schedule) -> Decision
     // Residual γ/η with every served assignment committed. Raw
     // subtraction, not CapacityTracker: relaxed policies may legally
     // overdraw, and a negative residual simply means nothing else fits.
-    let mut gamma: Vec<f64> = inst
-        .topology
-        .servers
-        .iter()
-        .map(|s| if s.up { s.gamma } else { 0.0 })
-        .collect();
-    let mut eta: Vec<f64> = inst
-        .topology
-        .servers
-        .iter()
-        .map(|s| if s.up { s.eta } else { 0.0 })
-        .collect();
+    // γ reads through the instance accessor so a DES frame's residual
+    // slice is honored.
+    let mut gamma: Vec<f64> = Vec::with_capacity(inst.num_servers());
+    let mut eta: Vec<f64> = Vec::with_capacity(inst.num_servers());
+    for (j, s) in inst.topology.servers.iter().enumerate() {
+        gamma.push(if s.up { inst.gamma(j) } else { 0.0 });
+        eta.push(if s.up { inst.eta(j) } else { 0.0 });
+    }
     for (i, slot) in schedule.slots.iter().enumerate() {
         if let Some(a) = slot {
             gamma[a.candidate.server.0] -= a.candidate.comp_cost;
@@ -90,23 +86,34 @@ pub fn explain_schedule(inst: &ProblemInstance, schedule: &Schedule) -> Decision
     }
 
     let mut out = DecisionExplain::default();
+    out.outcomes.reserve(inst.num_requests());
+    // One candidate buffer reused across all requests; reachability, QoS
+    // feasibility, and capacity fit are counted in a single pass instead
+    // of materializing filtered copies.
+    let mut cands: Vec<Candidate> = Vec::new();
     for (i, slot) in schedule.slots.iter().enumerate() {
         let req = &inst.requests[i];
         let covering_up = inst.topology.servers[req.covering.0].up;
-        let cands = inst.candidates(i);
+        inst.candidates_into(i, &mut cands);
         let considered = cands.len();
-        // Offloading rides the covering edge's uplink; with that edge
-        // down, remote candidates are physically unreachable.
-        let reachable: Vec<Candidate> = cands
-            .iter()
-            .copied()
-            .filter(|c| !c.offloaded || covering_up)
-            .collect();
-        let qos_ok: Vec<Candidate> = reachable
-            .iter()
-            .copied()
-            .filter(|c| qos_satisfied(req, c))
-            .collect();
+        let mut n_reachable = 0usize;
+        let mut n_qos = 0usize;
+        let mut any_fits = false;
+        for c in cands.iter() {
+            // Offloading rides the covering edge's uplink; with that edge
+            // down, remote candidates are physically unreachable.
+            if c.offloaded && !covering_up {
+                continue;
+            }
+            n_reachable += 1;
+            if !qos_satisfied(req, c) {
+                continue;
+            }
+            n_qos += 1;
+            if fits_residual(c, req.covering.0, &gamma, &eta) {
+                any_fits = true;
+            }
+        }
         let outcome = match slot {
             Some(a) => Outcome::Served {
                 server: a.candidate.server.0,
@@ -115,14 +122,11 @@ pub fn explain_schedule(inst: &ProblemInstance, schedule: &Schedule) -> Decision
                 offloaded: a.candidate.offloaded,
             },
             None => {
-                let reason = if reachable.is_empty() {
+                let reason = if n_reachable == 0 {
                     DropReason::ServerDown
-                } else if qos_ok.is_empty() {
+                } else if n_qos == 0 {
                     DropReason::DeadlineInfeasible
-                } else if !qos_ok
-                    .iter()
-                    .any(|c| fits_residual(c, req.covering.0, &gamma, &eta))
-                {
+                } else if !any_fits {
                     DropReason::CapacityExhausted
                 } else {
                     DropReason::Policy
@@ -135,7 +139,7 @@ pub fn explain_schedule(inst: &ProblemInstance, schedule: &Schedule) -> Decision
         out.outcomes.push(RequestOutcome {
             request: i,
             considered,
-            qos_feasible: qos_ok.len(),
+            qos_feasible: n_qos,
             outcome,
         });
     }
@@ -169,7 +173,7 @@ mod tests {
     }
 
     /// Two edge servers (ids 0, 1), 1 ms apart, full placement.
-    fn inst_with(gamma: f64, ups: [bool; 2], requests: Vec<Request>) -> ProblemInstance {
+    fn inst_with(gamma: f64, ups: [bool; 2], requests: Vec<Request>) -> ProblemInstance<'static> {
         let topology = Topology::explicit(
             vec![
                 Server::new(0, ServerClass::EdgeMedium)

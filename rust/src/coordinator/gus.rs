@@ -13,8 +13,8 @@
 use crate::coordinator::us::{
     qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
 };
-use crate::coordinator::Scheduler;
-use crate::model::ProblemInstance;
+use crate::coordinator::{SchedScratch, Scheduler};
+use crate::model::{Candidate, ProblemInstance};
 use crate::util::rng::Rng;
 
 /// The GUS policy. `mode` defaults to strict; the Happy-* baselines reuse
@@ -42,18 +42,36 @@ impl Gus {
         inst: &ProblemInstance,
         tracker: &mut CapacityTracker,
     ) -> Schedule {
-        let mut schedule = Schedule::empty(inst.num_requests());
+        let mut out = Schedule::empty(inst.num_requests());
+        let (mut cands, mut ranked, mut order) = (Vec::new(), Vec::new(), Vec::new());
+        self.fill(inst, tracker, &mut cands, &mut ranked, &mut order, &mut out);
+        out
+    }
+
+    /// Algorithm 1 proper, writing into caller-owned buffers. In the DES
+    /// every buffer arrives warm from the previous frame, so the loop
+    /// runs allocation-free in steady state.
+    fn fill(
+        &self,
+        inst: &ProblemInstance,
+        tracker: &mut CapacityTracker,
+        cands: &mut Vec<Candidate>,
+        ranked: &mut Vec<(f64, Candidate)>,
+        order: &mut Vec<usize>,
+        out: &mut Schedule,
+    ) {
+        out.reset(inst.num_requests());
         // Requests are considered highest-priority-first (paper §V future
         // work); within a priority class, submission order (the paper's
         // Algorithm 1 order) is preserved.
-        let mut order: Vec<usize> = (0..inst.num_requests()).collect();
+        order.clear();
+        order.extend(0..inst.num_requests());
         order.sort_by_key(|&i| std::cmp::Reverse(inst.requests[i].priority));
-        // Reusable candidate buffer: (us, candidate).
-        let mut ranked = Vec::new();
-        for i in order {
+        for &i in order.iter() {
             let req = &inst.requests[i];
+            inst.candidates_into(i, cands);
             ranked.clear();
-            for cand in inst.candidates(i) {
+            for &cand in cands.iter() {
                 if self.mode.qos && !qos_satisfied(req, &cand) {
                     continue;
                 }
@@ -74,10 +92,10 @@ impl Gus {
                     .then_with(|| a.1.offloaded.cmp(&b.1.offloaded))
                     .then_with(|| a.1.tier.cmp(&b.1.tier))
             });
-            for (us, cand) in &ranked {
+            for (us, cand) in ranked.iter() {
                 if tracker.fits(req, cand) {
                     tracker.commit(req, cand);
-                    schedule.slots[i] = Some(Assignment {
+                    out.slots[i] = Some(Assignment {
                         request: req.id,
                         candidate: *cand,
                         us: *us,
@@ -86,7 +104,6 @@ impl Gus {
                 }
             }
         }
-        schedule
     }
 }
 
@@ -95,9 +112,16 @@ impl Scheduler for Gus {
         "gus"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
-        let mut tracker = CapacityTracker::new(inst, self.mode);
-        self.schedule_with_tracker(inst, &mut tracker)
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        _rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        let SchedScratch { cands, ranked, order, tracker, .. } = scratch;
+        tracker.reset(inst, self.mode);
+        self.fill(inst, tracker, cands, ranked, order, out);
     }
 }
 
@@ -111,7 +135,7 @@ mod tests {
     use crate::model::topology::{Topology, TopologyParams};
     use crate::util::rng::Rng;
 
-    fn small_instance(n_requests: usize, seed: u64) -> ProblemInstance {
+    fn small_instance(n_requests: usize, seed: u64) -> ProblemInstance<'static> {
         let mut rng = Rng::new(seed);
         let topology = Topology::paper_default(
             &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },

@@ -20,7 +20,7 @@ use crate::coordinator::gus::Gus;
 use crate::coordinator::us::{
     qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
 };
-use crate::coordinator::Scheduler;
+use crate::coordinator::{SchedScratch, Scheduler};
 use crate::model::instance::Candidate;
 use crate::model::ProblemInstance;
 use crate::util::rng::Rng;
@@ -49,7 +49,7 @@ pub struct SolveResult {
 }
 
 struct SearchState<'a> {
-    inst: &'a ProblemInstance,
+    inst: &'a ProblemInstance<'a>,
     /// Per request: QoS-feasible candidates, best US first.
     options: Vec<Vec<(f64, Candidate)>>,
     /// `suffix_best[i]` = Σ_{r ≥ i} max US of r (capacity-free bound).
@@ -113,11 +113,13 @@ impl BranchAndBound {
     pub fn solve(&self, inst: &ProblemInstance) -> SolveResult {
         let n = inst.num_requests();
         let mut options: Vec<Vec<(f64, Candidate)>> = Vec::with_capacity(n);
+        let mut cands: Vec<Candidate> = Vec::new();
         for i in 0..n {
             let req = &inst.requests[i];
-            let mut opts: Vec<(f64, Candidate)> = inst
-                .candidates(i)
-                .into_iter()
+            inst.candidates_into(i, &mut cands);
+            let mut opts: Vec<(f64, Candidate)> = cands
+                .iter()
+                .copied()
                 .filter(|c| !self.mode.qos || qos_satisfied(req, c))
                 .map(|c| {
                     (
@@ -182,8 +184,16 @@ impl Scheduler for BranchAndBound {
         "ilp"
     }
 
-    fn schedule(&self, inst: &ProblemInstance, _rng: &mut Rng) -> Schedule {
-        self.solve(inst).schedule
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        _rng: &mut Rng,
+        _scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        // The exact search allocates its own branching structures; it is
+        // deliberately excluded from hot-path sweeps (see `all_schedulers`).
+        *out = self.solve(inst).schedule;
     }
 }
 
@@ -196,7 +206,7 @@ mod tests {
     use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
     use crate::model::topology::{Topology, TopologyParams};
 
-    fn instance(n: usize, seed: u64) -> ProblemInstance {
+    fn instance(n: usize, seed: u64) -> ProblemInstance<'static> {
         let mut rng = Rng::new(seed);
         let topology = Topology::paper_default(
             &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },

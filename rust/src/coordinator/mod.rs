@@ -16,16 +16,55 @@ pub mod gus;
 pub mod ilp;
 pub mod us;
 
-use crate::model::ProblemInstance;
+use crate::model::{Candidate, ProblemInstance};
 use crate::util::rng::Rng;
 pub use us::{Assignment, CapacityTracker, ConstraintMode, Schedule};
+
+/// Reusable scheduler working memory. The DES owns one of these for the
+/// whole run and hands it to [`Scheduler::schedule_into`] every frame,
+/// so the steady-state decision loop performs no heap allocation: the
+/// candidate buffer, ranking buffers, priority order, and capacity
+/// tracker all retain their capacity across frames.
+#[derive(Default)]
+pub struct SchedScratch {
+    /// Per-request candidate enumeration buffer.
+    pub cands: Vec<Candidate>,
+    /// (user-satisfaction, candidate) ranking buffer.
+    pub ranked: Vec<(f64, Candidate)>,
+    /// Secondary ranking buffer (Offload-All merges per-cloud runs).
+    pub ranked_tmp: Vec<(f64, Candidate)>,
+    /// Request indices in scheduling (priority) order.
+    pub order: Vec<usize>,
+    /// Residual-capacity tracker, refilled from the instance per call.
+    pub tracker: CapacityTracker,
+}
 
 /// A scheduling policy: produces a full [`Schedule`] for one decision
 /// frame. `rng` makes stochastic policies (Random-Assignment) and
 /// tie-breaking reproducible.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
-    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule;
+
+    /// Allocation-free entry point: write the schedule for `inst` into
+    /// `out` (resized to `inst.num_requests()`), using `scratch` for all
+    /// working memory. Implementations must fully reset both — callers
+    /// pass them warm from the previous frame.
+    fn schedule_into(
+        &self,
+        inst: &ProblemInstance,
+        rng: &mut Rng,
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    );
+
+    /// Convenience wrapper that allocates fresh scratch and schedule;
+    /// batch callers (figures, Monte-Carlo, tests) use this.
+    fn schedule(&self, inst: &ProblemInstance, rng: &mut Rng) -> Schedule {
+        let mut scratch = SchedScratch::default();
+        let mut out = Schedule::empty(inst.num_requests());
+        self.schedule_into(inst, rng, &mut scratch, &mut out);
+        out
+    }
 }
 
 /// Every scheduler the evaluation compares, in the paper's order.

@@ -77,6 +77,13 @@ impl Schedule {
         Schedule { slots: vec![None; n] }
     }
 
+    /// Clear and resize to `n` empty slots, keeping the allocation. The
+    /// DES reuses one `Schedule` across all frames through this.
+    pub fn reset(&mut self, n: usize) {
+        self.slots.clear();
+        self.slots.resize(n, None);
+    }
+
     pub fn served(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
@@ -165,26 +172,41 @@ pub struct CapacityTracker {
     mode: ConstraintMode,
 }
 
+impl Default for CapacityTracker {
+    /// An empty tracker; must be [`CapacityTracker::reset`] against an
+    /// instance before use. Exists so `SchedScratch` can pool one.
+    fn default() -> CapacityTracker {
+        CapacityTracker {
+            gamma: Vec::new(),
+            eta: Vec::new(),
+            up: Vec::new(),
+            mode: ConstraintMode::STRICT,
+        }
+    }
+}
+
 impl CapacityTracker {
     /// Down servers (scenario outages) contribute zero γ and zero η —
     /// even the Happy-* relaxations cannot route work through them, and
     /// a down covering edge cannot forward offloads.
     pub fn new(inst: &ProblemInstance, mode: ConstraintMode) -> CapacityTracker {
-        CapacityTracker {
-            gamma: inst
-                .topology
-                .servers
-                .iter()
-                .map(|s| if s.up { s.gamma } else { 0.0 })
-                .collect(),
-            eta: inst
-                .topology
-                .servers
-                .iter()
-                .map(|s| if s.up { s.eta } else { 0.0 })
-                .collect(),
-            up: inst.topology.servers.iter().map(|s| s.up).collect(),
-            mode,
+        let mut tracker = CapacityTracker::default();
+        tracker.reset(inst, mode);
+        tracker
+    }
+
+    /// Refill from `inst` without reallocating: clears and re-pushes into
+    /// the retained buffers. Capacities come from the instance accessors,
+    /// so a DES frame's residual γ is honored transparently.
+    pub fn reset(&mut self, inst: &ProblemInstance, mode: ConstraintMode) {
+        self.mode = mode;
+        self.gamma.clear();
+        self.eta.clear();
+        self.up.clear();
+        for (j, s) in inst.topology.servers.iter().enumerate() {
+            self.gamma.push(if s.up { inst.gamma(j) } else { 0.0 });
+            self.eta.push(if s.up { inst.eta(j) } else { 0.0 });
+            self.up.push(s.up);
         }
     }
 
@@ -289,12 +311,14 @@ pub fn validate_schedule(
         }
     }
     for j in 0..inst.num_servers() {
-        let s = &inst.topology.servers[j];
-        if mode.computation && gamma_used[j] > s.gamma + 1e-9 {
-            return Err(format!("server {j}: γ exceeded ({} > {})", gamma_used[j], s.gamma));
+        // Capacities via the instance accessors so per-frame residual γ
+        // (DES) binds the check exactly like the steady-state value.
+        let (gamma_j, eta_j) = (inst.gamma(j), inst.eta(j));
+        if mode.computation && gamma_used[j] > gamma_j + 1e-9 {
+            return Err(format!("server {j}: γ exceeded ({} > {})", gamma_used[j], gamma_j));
         }
-        if mode.communication && eta_used[j] > s.eta + 1e-9 {
-            return Err(format!("server {j}: η exceeded ({} > {})", eta_used[j], s.eta));
+        if mode.communication && eta_used[j] > eta_j + 1e-9 {
+            return Err(format!("server {j}: η exceeded ({} > {})", eta_used[j], eta_j));
         }
     }
     Ok(())
@@ -373,7 +397,7 @@ mod tests {
         assert_eq!(Schedule::empty(0).objective(), 0.0);
     }
 
-    fn two_server_instance(second_up: bool) -> ProblemInstance {
+    fn two_server_instance(second_up: bool) -> ProblemInstance<'static> {
         use crate::model::server::{Server, ServerClass};
         use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
         use crate::model::Topology;
@@ -409,12 +433,28 @@ mod tests {
     }
 
     #[test]
+    fn tracker_reset_matches_fresh_construction() {
+        let inst = two_server_instance(true);
+        let fresh = CapacityTracker::new(&inst, ConstraintMode::STRICT);
+        let mut pooled = CapacityTracker::default();
+        // Dirty the pooled tracker, then reset against the instance.
+        pooled.gamma.push(999.0);
+        pooled.reset(&inst, ConstraintMode::STRICT);
+        assert_eq!(pooled.gamma, fresh.gamma);
+        assert_eq!(pooled.eta, fresh.eta);
+        // A residual γ slice attached to the instance flows through.
+        let inst = two_server_instance(true).with_residual_gamma(vec![1.5, 2.5]);
+        pooled.reset(&inst, ConstraintMode::STRICT);
+        assert_eq!(pooled.gamma, vec![1.5, 2.5]);
+    }
+
+    #[test]
     fn down_covering_edge_blocks_offload_even_when_eta_relaxed() {
         // Server 1 is up (a fine target), but covering server 0 is down:
         // offloading must fail in every mode — Happy-Communication drops
         // the η budget, not the physical link.
         let mut inst = two_server_instance(true);
-        inst.topology.servers[0].up = false;
+        inst.topology.to_mut().servers[0].up = false;
         let req = &inst.requests[0];
         let tier = TierId(0);
         let profile = inst.catalog.profile(req.service, tier);

@@ -241,7 +241,7 @@ pub fn run_optimal_gap(sizes: &[usize], instances_per_size: usize, seed: u64) ->
             // Tighten capacities so requests genuinely compete: with the
             // class defaults the greedy is trivially optimal (the paper's
             // CPLEX comparison likewise used constrained small cases).
-            for s in &mut inst.topology.servers {
+            for s in &mut inst.topology.to_mut().servers {
                 s.gamma = if s.is_cloud() { (n as f64 / 3.0).max(2.0) } else { 2.0 };
                 s.eta = 2.0;
             }

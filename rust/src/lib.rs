@@ -52,8 +52,8 @@ pub mod prelude {
     pub use crate::coordinator::gus::Gus;
     pub use crate::coordinator::ilp::BranchAndBound;
     pub use crate::coordinator::{
-        all_schedulers, scheduler_by_name, Assignment, CapacityTracker, ConstraintMode, Schedule,
-        Scheduler,
+        all_schedulers, scheduler_by_name, Assignment, CapacityTracker, ConstraintMode,
+        SchedScratch, Schedule, Scheduler,
     };
     pub use crate::model::{
         Candidate, Placement, ProblemInstance, Request, Server, ServerClass, ServerId,

@@ -113,7 +113,7 @@ fn run_instrumented_des(
     cfg.arrival_rate_per_s = rate;
     eprintln!("instrumented DES pass: {policy} @ {rate} req/s");
     let report = edgeus::sim::Des::new(cfg, scheduler.as_ref())
-        .with_recorder(Arc::clone(&recorder))
+        .with_recorder(&recorder)
         .run();
     println!(
         "\n# decision explanations — {policy} @ {rate} req/s\n\n{}",

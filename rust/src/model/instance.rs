@@ -1,11 +1,21 @@
 //! A complete MUS problem instance: topology + catalog + placement +
 //! requests + the normalization constants (Max_as, Max_cs) of Def. II.1.
 //!
-//! `candidates(i)` enumerates every feasible-by-placement (server, tier)
-//! option for request i with its completion time
+//! `candidates_into(i, buf)` enumerates every feasible-by-placement
+//! (server, tier) option for request i with its completion time
 //! `c_ijkl = T^comm (if offloaded) + T^q + T^proc` — Eq. (II) of the
 //! paper — leaving QoS/capacity filtering to the schedulers (the Happy-*
 //! baselines relax different constraints).
+//!
+//! The world (topology/catalog/placement) is held behind [`Cow`]: batch
+//! callers own it (`ProblemInstance::new`), while the DES decision loop
+//! borrows the live world every frame (`ProblemInstance::borrowed`) and
+//! attaches the per-frame residual γ as a side slice — no per-frame
+//! deep clones. Schedulers must therefore read capacities through
+//! [`ProblemInstance::gamma`]/[`ProblemInstance::eta`], never from the
+//! topology's servers directly.
+
+use std::borrow::Cow;
 
 use crate::model::request::Request;
 use crate::model::server::ServerId;
@@ -32,25 +42,50 @@ pub struct Candidate {
 }
 
 /// The full instance handed to schedulers.
+///
+/// `'w` is the lifetime of the borrowed world; owned instances (the
+/// common case outside the DES) are `ProblemInstance<'static>`.
 #[derive(Clone, Debug)]
-pub struct ProblemInstance {
-    pub topology: Topology,
-    pub catalog: ServiceCatalog,
-    pub placement: Placement,
+pub struct ProblemInstance<'w> {
+    pub topology: Cow<'w, Topology>,
+    pub catalog: Cow<'w, ServiceCatalog>,
+    pub placement: Cow<'w, Placement>,
     pub requests: Vec<Request>,
     /// Max possible accuracy in the system (Def. II.1 `Max_as`, percent).
     pub max_accuracy_pct: f64,
     /// Worst-case completion time (Def. II.1 `Max_cs`, ms).
     pub max_completion_ms: f64,
+    /// Per-frame residual computation capacity, indexed by server. When
+    /// present it overrides `topology.servers[j].gamma` (read through
+    /// [`ProblemInstance::gamma`]); the DES attaches it instead of
+    /// cloning the topology and mutating γ in place.
+    residual_gamma: Option<Vec<f64>>,
 }
 
-impl ProblemInstance {
+impl ProblemInstance<'static> {
     pub fn new(
         topology: Topology,
         catalog: ServiceCatalog,
         placement: Placement,
         requests: Vec<Request>,
-    ) -> ProblemInstance {
+    ) -> ProblemInstance<'static> {
+        ProblemInstance::from_parts(
+            Cow::Owned(topology),
+            Cow::Owned(catalog),
+            Cow::Owned(placement),
+            requests,
+        )
+    }
+}
+
+impl<'w> ProblemInstance<'w> {
+    /// General constructor: any mix of borrowed and owned world parts.
+    pub fn from_parts(
+        topology: Cow<'w, Topology>,
+        catalog: Cow<'w, ServiceCatalog>,
+        placement: Cow<'w, Placement>,
+        requests: Vec<Request>,
+    ) -> ProblemInstance<'w> {
         assert_eq!(
             placement.num_servers(),
             topology.len(),
@@ -67,7 +102,56 @@ impl ProblemInstance {
             requests,
             max_accuracy_pct,
             max_completion_ms,
+            residual_gamma: None,
         }
+    }
+
+    /// Zero-copy constructor: borrow the live world (DES / serving hot
+    /// paths).
+    pub fn borrowed(
+        topology: &'w Topology,
+        catalog: &'w ServiceCatalog,
+        placement: &'w Placement,
+        requests: Vec<Request>,
+    ) -> ProblemInstance<'w> {
+        ProblemInstance::from_parts(
+            Cow::Borrowed(topology),
+            Cow::Borrowed(catalog),
+            Cow::Borrowed(placement),
+            requests,
+        )
+    }
+
+    /// Attach the per-frame residual γ slice (one entry per server).
+    pub fn with_residual_gamma(mut self, residual_gamma: Vec<f64>) -> Self {
+        assert_eq!(residual_gamma.len(), self.topology.len());
+        self.residual_gamma = Some(residual_gamma);
+        self
+    }
+
+    /// Effective computation capacity γ_j for this instance: the
+    /// per-frame residual when one is attached, else the topology's
+    /// steady-state value.
+    #[inline]
+    pub fn gamma(&self, j: usize) -> f64 {
+        match &self.residual_gamma {
+            Some(r) => r[j],
+            None => self.topology.servers[j].gamma,
+        }
+    }
+
+    /// Communication capacity η_j (never overridden per frame: offload
+    /// slots free up at the frame boundary).
+    #[inline]
+    pub fn eta(&self, j: usize) -> f64 {
+        self.topology.servers[j].eta
+    }
+
+    /// Tear down the instance and hand its owned buffers back to the
+    /// caller, so a pooled hot path (DES `FrameScratch`) can reuse their
+    /// capacity on the next frame.
+    pub fn into_buffers(self) -> (Vec<Request>, Option<Vec<f64>>) {
+        (self.requests, self.residual_gamma)
     }
 
     pub fn with_normalization(mut self, max_accuracy_pct: f64, max_completion_ms: f64) -> Self {
@@ -98,13 +182,18 @@ impl ProblemInstance {
         req.queue_delay_ms + comm + proc
     }
 
-    /// Enumerate all placement-feasible candidates for request `i`.
-    /// No QoS or capacity filtering here (schedulers differ on that) —
-    /// but down servers (scenario outages) are excluded outright: every
-    /// policy, including the Happy-* relaxations, must respect them.
-    pub fn candidates(&self, i: usize) -> Vec<Candidate> {
+    /// Enumerate all placement-feasible candidates for request `i` into
+    /// `out` (cleared first). No QoS or capacity filtering here
+    /// (schedulers differ on that) — but down servers (scenario outages)
+    /// are excluded outright: every policy, including the Happy-*
+    /// relaxations, must respect them.
+    ///
+    /// The buffer form is the hot-path API: schedulers reuse one
+    /// `Vec<Candidate>` across every request of every frame, so the
+    /// steady-state enumeration cost is pure writes into warm capacity.
+    pub fn candidates_into(&self, i: usize, out: &mut Vec<Candidate>) {
+        out.clear();
         let req = &self.requests[i];
-        let mut out = Vec::new();
         for j in 0..self.topology.len() {
             if !self.topology.servers[j].up {
                 continue;
@@ -126,6 +215,12 @@ impl ProblemInstance {
                 });
             }
         }
+    }
+
+    /// Allocating convenience wrapper around [`Self::candidates_into`].
+    pub fn candidates(&self, i: usize) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        self.candidates_into(i, &mut out);
         out
     }
 
@@ -167,7 +262,7 @@ mod tests {
     use crate::model::topology::TopologyParams;
     use crate::util::rng::Rng;
 
-    pub fn tiny_instance() -> ProblemInstance {
+    pub fn tiny_instance() -> ProblemInstance<'static> {
         let mut rng = Rng::new(42);
         let topology = Topology::paper_default(
             &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
@@ -225,7 +320,7 @@ mod tests {
     #[test]
     fn candidates_skip_down_servers() {
         let mut inst = tiny_instance();
-        inst.topology.servers[1].up = false;
+        inst.topology.to_mut().servers[1].up = false;
         let cands = inst.candidates(0);
         assert_eq!(cands.len(), 9, "3 live servers × 3 tiers");
         assert!(cands.iter().all(|c| c.server != ServerId(1)));
@@ -273,6 +368,39 @@ mod tests {
         let mut inst = tiny_instance();
         inst.requests[0].service = ServiceId(99);
         assert!(inst.validate().is_err());
+    }
+
+    #[test]
+    fn residual_gamma_overrides_topology() {
+        let inst = tiny_instance();
+        let n = inst.num_servers();
+        for j in 0..n {
+            assert_eq!(inst.gamma(j), inst.topology.servers[j].gamma);
+            assert_eq!(inst.eta(j), inst.topology.servers[j].eta);
+        }
+        let inst = inst.with_residual_gamma(vec![0.5; n]);
+        for j in 0..n {
+            assert_eq!(inst.gamma(j), 0.5);
+        }
+        let (requests, residual) = inst.into_buffers();
+        assert_eq!(requests.len(), 3);
+        assert_eq!(residual.unwrap(), vec![0.5; n]);
+    }
+
+    #[test]
+    fn borrowed_instance_enumerates_like_owned() {
+        let owned = tiny_instance();
+        let borrowed = ProblemInstance::borrowed(
+            &owned.topology,
+            &owned.catalog,
+            &owned.placement,
+            owned.requests.clone(),
+        );
+        let mut buf = Vec::new();
+        for i in 0..owned.num_requests() {
+            borrowed.candidates_into(i, &mut buf);
+            assert_eq!(buf, owned.candidates(i));
+        }
     }
 
     #[test]

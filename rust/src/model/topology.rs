@@ -13,8 +13,11 @@ use crate::util::rng::Rng;
 #[derive(Clone, Debug)]
 pub struct Topology {
     pub servers: Vec<Server>,
-    /// `comm_ms[a][b]`: delay to forward one request payload a→b.
-    comm_ms: Vec<Vec<f64>>,
+    /// Row-major `n×n` delay matrix: entry `a·n + b` is the delay to
+    /// forward one request payload a→b. Flattened to a single allocation
+    /// so the DES hot path gets one contiguous, cache-friendly block
+    /// instead of a pointer-chased `Vec<Vec<f64>>`.
+    comm_ms: Box<[f64]>,
 }
 
 /// Parameters for the default paper-style topology.
@@ -60,7 +63,10 @@ impl Topology {
             servers.push(Server::new(params.num_edge + i, ServerClass::Cloud));
         }
         let n = servers.len();
-        let mut comm_ms = vec![vec![0.0; n]; n];
+        // Row-major fill in the same a-outer/b-inner order (skipping the
+        // diagonal) as the historical nested-Vec build, so the RNG draw
+        // sequence — and therefore every seeded experiment — is unchanged.
+        let mut comm_ms = vec![0.0; n * n];
         for a in 0..n {
             for b in 0..n {
                 if a == b {
@@ -71,10 +77,10 @@ impl Topology {
                 } else {
                     params.edge_edge_ms
                 };
-                comm_ms[a][b] = base * rng.uniform(1.0 - params.jitter, 1.0 + params.jitter);
+                comm_ms[a * n + b] = base * rng.uniform(1.0 - params.jitter, 1.0 + params.jitter);
             }
         }
-        Topology { servers, comm_ms }
+        Topology { servers, comm_ms: comm_ms.into_boxed_slice() }
     }
 
     /// Explicit construction (tests, serving path).
@@ -82,7 +88,8 @@ impl Topology {
         let n = servers.len();
         assert_eq!(comm_ms.len(), n);
         assert!(comm_ms.iter().all(|row| row.len() == n));
-        Topology { servers, comm_ms }
+        let flat: Vec<f64> = comm_ms.into_iter().flatten().collect();
+        Topology { servers, comm_ms: flat.into_boxed_slice() }
     }
 
     pub fn len(&self) -> usize {
@@ -98,21 +105,27 @@ impl Topology {
     }
 
     /// Communication delay T^comm for forwarding one request a→b (ms).
+    #[inline]
     pub fn comm_ms(&self, a: ServerId, b: ServerId) -> f64 {
-        self.comm_ms[a.0][b.0]
+        self.comm_ms[a.0 * self.servers.len() + b.0]
     }
 
     /// Overwrite one directed link delay (used by the serving path when
     /// the bandwidth estimator updates its expectation).
     pub fn set_comm_ms(&mut self, a: ServerId, b: ServerId, ms: f64) {
-        self.comm_ms[a.0][b.0] = ms;
+        self.comm_ms[a.0 * self.servers.len() + b.0] = ms;
     }
 
-    /// Snapshot of the full comm matrix. The scenario engine keeps this
-    /// as the baseline that `BandwidthDrift` events scale against, so a
-    /// drift back to factor 1.0 restores the exact original delays.
+    /// Snapshot of the full comm matrix (as nested rows, for callers that
+    /// want the historical shape). The scenario engine keeps this as the
+    /// baseline that `BandwidthDrift` events scale against, so a drift
+    /// back to factor 1.0 restores the exact original delays.
     pub fn comm_matrix(&self) -> Vec<Vec<f64>> {
-        self.comm_ms.clone()
+        let n = self.servers.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        self.comm_ms.chunks(n).map(|row| row.to_vec()).collect()
     }
 
     pub fn edge_ids(&self) -> Vec<ServerId> {
@@ -126,11 +139,7 @@ impl Topology {
     /// Worst-case completion time `Max_cs` ingredient: the largest
     /// pairwise communication delay in the system.
     pub fn max_comm_ms(&self) -> f64 {
-        self.comm_ms
-            .iter()
-            .flatten()
-            .copied()
-            .fold(0.0, f64::max)
+        self.comm_ms.iter().copied().fold(0.0, f64::max)
     }
 }
 

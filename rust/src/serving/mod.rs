@@ -466,8 +466,16 @@ impl ServingSystem {
                         .with_payload(req.payload_bytes)
                 })
                 .collect();
-            let inst = ProblemInstance::new(topology, catalog.clone(), placement.clone(), requests)
-                .with_normalization(100.0, 12_000.0);
+            // The topology is rebuilt each frame (capacities move), but
+            // the catalog and placement are borrowed — no per-frame
+            // deep clone of the service profiles.
+            let inst = ProblemInstance::from_parts(
+                std::borrow::Cow::Owned(topology),
+                std::borrow::Cow::Borrowed(&catalog),
+                std::borrow::Cow::Borrowed(&placement),
+                requests,
+            )
+            .with_normalization(100.0, 12_000.0);
             let sched_w0 =
                 recorder.as_ref().map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
             let schedule: Schedule = scheduler.schedule(&inst, &mut leader_rng);

@@ -22,7 +22,7 @@
 //! and capacity utilization.
 
 use crate::coordinator::explain::{explain_schedule, Outcome};
-use crate::coordinator::{Scheduler, Schedule};
+use crate::coordinator::{SchedScratch, Schedule, Scheduler};
 use crate::model::request::Request;
 use crate::model::service::ServiceId;
 use crate::model::{Placement, ProblemInstance, ServiceCatalog, Topology};
@@ -35,7 +35,6 @@ use crate::workload::ScenarioParams;
 use crate::workload::WorkloadParams;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::Arc;
 use std::time::Instant;
 
 /// Configuration of one DES run.
@@ -247,6 +246,63 @@ impl DesReport {
         Json::obj(fields)
     }
 
+    /// Verify the run's conservation invariants: every generated request
+    /// is accounted for exactly once, the decision-kind split sums to
+    /// served, and the per-frame cumulative series is monotone and
+    /// self-consistent at every decision boundary.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        if self.generated != self.served + self.dropped + self.rejected_at_queue {
+            return Err(format!(
+                "conservation: generated {} != served {} + dropped {} + rejected {}",
+                self.generated, self.served, self.dropped, self.rejected_at_queue
+            ));
+        }
+        if self.served != self.local + self.cloud + self.peer {
+            return Err(format!(
+                "kind split: served {} != local {} + cloud {} + peer {}",
+                self.served, self.local, self.cloud, self.peer
+            ));
+        }
+        if self.satisfied > self.served {
+            return Err(format!("satisfied {} > served {}", self.satisfied, self.served));
+        }
+        let mut prev = FrameSample::default();
+        for (k, f) in self.frames.iter().enumerate() {
+            if f.t_ms < prev.t_ms {
+                return Err(format!("frame {k}: time went backwards"));
+            }
+            let monotone = f.generated >= prev.generated
+                && f.served >= prev.served
+                && f.satisfied >= prev.satisfied
+                && f.dropped >= prev.dropped
+                && f.rejected >= prev.rejected
+                && f.local >= prev.local
+                && f.cloud >= prev.cloud
+                && f.peer >= prev.peer;
+            if !monotone {
+                return Err(format!("frame {k}: cumulative counter decreased"));
+            }
+            if f.served != f.local + f.cloud + f.peer {
+                return Err(format!("frame {k}: kind split does not sum to served"));
+            }
+            if f.satisfied > f.served {
+                return Err(format!("frame {k}: satisfied exceeds served"));
+            }
+            // Requests still queued or in flight keep generated ahead of
+            // the settled counters at any boundary.
+            if f.generated < f.served + f.dropped + f.rejected {
+                return Err(format!("frame {k}: settled more requests than generated"));
+            }
+            prev = f.clone();
+        }
+        if let Some(last) = self.frames.last() {
+            if last.generated != self.generated {
+                return Err("final frame missed arrivals".to_string());
+            }
+        }
+        Ok(())
+    }
+
     /// Render the per-frame decision explanations as a markdown table
     /// (empty string when the run had no enabled recorder).
     pub fn explain_markdown(&self) -> String {
@@ -332,11 +388,27 @@ impl PartialOrd for Entry {
     }
 }
 
+/// Pooled per-frame working memory, owned by one run and reused across
+/// every decision frame: once buffers reach their steady-state size the
+/// decision hot path stops allocating entirely.
+struct FrameScratch {
+    /// (edge position, pending request, T^q) drained this frame.
+    drained: Vec<(usize, Pending, f64)>,
+    /// Request buffer lent to the frame instance, recovered after.
+    requests: Vec<Request>,
+    /// Residual-γ slice lent to the frame instance, recovered after.
+    residual_gamma: Vec<f64>,
+    /// Scheduler working memory (candidate/ranking buffers, tracker).
+    sched: SchedScratch,
+    /// Reused schedule output.
+    schedule: Schedule,
+}
+
 /// The simulator.
 pub struct Des<'a> {
     cfg: DesConfig,
     scheduler: &'a (dyn Scheduler + Send + Sync),
-    recorder: Option<Arc<Recorder>>,
+    recorder: Option<&'a Recorder>,
 }
 
 impl<'a> Des<'a> {
@@ -344,18 +416,33 @@ impl<'a> Des<'a> {
         Des { cfg, scheduler, recorder: None }
     }
 
-    /// Attach an observability recorder. A disabled recorder keeps the
-    /// run (and its report bytes) identical to a recorder-less run; an
-    /// enabled one additionally populates [`DesReport::explain`].
-    pub fn with_recorder(mut self, recorder: Arc<Recorder>) -> Des<'a> {
+    /// Attach an observability recorder (borrowed — a run never clones
+    /// it). A disabled recorder keeps the run (and its report bytes)
+    /// identical to a recorder-less run; an enabled one additionally
+    /// populates [`DesReport::explain`].
+    pub fn with_recorder(mut self, recorder: &'a Recorder) -> Des<'a> {
         self.recorder = Some(recorder);
         self
     }
 
+    /// Run the simulation on the pooled, allocation-free hot path.
     pub fn run(&self) -> DesReport {
+        self.run_impl(false)
+    }
+
+    /// Run with the pre-pooling decide path: deep-clone the world each
+    /// frame and mutate the clone's γ in place. Kept as the golden
+    /// oracle — `run()` must match it byte-for-byte on the same seed
+    /// (tests/des_golden.rs) — and as the bench baseline for the
+    /// before/after throughput numbers in BENCH_des.json.
+    pub fn run_reference(&self) -> DesReport {
+        self.run_impl(true)
+    }
+
+    fn run_impl(&self, reference: bool) -> DesReport {
         // `obs` is Some only for an *enabled* recorder: the hot loop
         // pays one `if let` test per site when observability is off.
-        let obs = self.recorder.as_deref().filter(|r| r.is_enabled());
+        let obs = self.recorder.filter(|r| r.is_enabled());
         let wall_t0 = Instant::now();
         if let Some(r) = obs {
             for reason in DropReason::ALL {
@@ -389,8 +476,21 @@ impl<'a> Des<'a> {
         // γ units currently occupied per server.
         let mut busy = vec![0.0f64; topology.len()];
 
-        let mut calendar: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+        // The calendar holds one pending arrival, a handful of decisions,
+        // and the in-flight completions — which are bounded by total γ
+        // (each served request occupies ≥ its comp_cost γ units). Size it
+        // once so steady state never regrows the heap.
+        let cal_capacity =
+            16 + topology.servers.iter().map(|s| s.gamma.max(0.0).ceil() as usize).sum::<usize>();
+        let mut calendar: BinaryHeap<Reverse<Entry>> = BinaryHeap::with_capacity(cal_capacity);
         let mut seq = 0u64;
+        let mut scratch = FrameScratch {
+            drained: Vec::with_capacity(edges.len() * self.cfg.queue_capacity),
+            requests: Vec::with_capacity(edges.len() * self.cfg.queue_capacity),
+            residual_gamma: Vec::with_capacity(topology.len()),
+            sched: SchedScratch::default(),
+            schedule: Schedule::empty(0),
+        };
         let mut push = |cal: &mut BinaryHeap<Reverse<Entry>>, seq: &mut u64, at: f64, ev: Event| {
             *seq += 1;
             cal.push(Reverse(Entry { at_ms: at, seq: *seq, event: ev }));
@@ -478,11 +578,9 @@ impl<'a> Des<'a> {
                         report.queue_len.push(q.len() as f64);
                     }
                     let drain_w0 = obs.map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
-                    let mut drained: Vec<(usize, Pending, f64)> = Vec::new();
+                    scratch.drained.clear();
                     for (pos, q) in queues.iter_mut().enumerate() {
-                        for (p, tq) in q.drain(now) {
-                            drained.push((pos, p, tq));
-                        }
+                        q.drain_with(now, |p, tq| scratch.drained.push((pos, p, tq)));
                     }
                     if let Some(r) = obs {
                         let t0 = drain_w0.unwrap_or(0.0);
@@ -490,10 +588,9 @@ impl<'a> Des<'a> {
                         r.span("des", "frame.drain", PID_WALL, 0, t0, t1 - t0, report.decisions);
                     }
                     let mut decided = None;
-                    if !drained.is_empty() {
+                    if !scratch.drained.is_empty() {
                         decided = self.decide(
                             now,
-                            &drained,
                             &topology,
                             &catalog,
                             &placement,
@@ -504,7 +601,9 @@ impl<'a> Des<'a> {
                             &mut calendar,
                             &mut seq,
                             &mut push,
+                            &mut scratch,
                             obs.is_some(),
+                            reference,
                         );
                     }
                     // Per-frame sample, after the decision committed its
@@ -557,10 +656,10 @@ impl<'a> Des<'a> {
                             events_applied,
                             ..FrameExplain::default()
                         };
-                        if let Some((inst, schedule, wall_us)) = &decided {
-                            let ex = explain_schedule(inst, schedule);
-                            fe.requests = schedule.slots.len() as u64;
-                            fe.served = schedule.served() as u64;
+                        if let Some((inst, wall_us)) = &decided {
+                            let ex = explain_schedule(inst, &scratch.schedule);
+                            fe.requests = scratch.schedule.slots.len() as u64;
+                            fe.served = scratch.schedule.served() as u64;
                             fe.candidates_considered = ex.candidates_considered;
                             fe.drop_deadline_infeasible = ex.drops(DropReason::DeadlineInfeasible);
                             fe.drop_capacity_exhausted = ex.drops(DropReason::CapacityExhausted);
@@ -568,7 +667,9 @@ impl<'a> Des<'a> {
                             fe.drop_policy = ex.drops(DropReason::Policy);
                             fe.schedule_wall_us = *wall_us;
                             r.add("edgeus_des_candidates_total", ex.candidates_considered as f64);
-                            for (oc, (edge_pos, p, tq)) in ex.outcomes.iter().zip(drained.iter()) {
+                            for (oc, (edge_pos, p, tq)) in
+                                ex.outcomes.iter().zip(scratch.drained.iter())
+                            {
                                 let track = edges[*edge_pos].0 as u32;
                                 match oc.outcome {
                                     Outcome::Served { server, offloaded, .. } => {
@@ -591,6 +692,16 @@ impl<'a> Des<'a> {
                             }
                         }
                         report.explain.push(fe);
+                    }
+                    // Recover the pooled buffers lent to an observed
+                    // frame's instance (the unobserved path gives them
+                    // back inside `decide`).
+                    if let Some((inst, _)) = decided {
+                        let (requests, residual) = inst.into_buffers();
+                        scratch.requests = requests;
+                        if let Some(r) = residual {
+                            scratch.residual_gamma = r;
+                        }
                     }
                     // Next frame while work can still arrive or drain.
                     if now < self.cfg.horizon_ms + 10.0 * self.cfg.frame_ms {
@@ -639,17 +750,19 @@ impl<'a> Des<'a> {
         report
     }
 
-    /// Run one decision frame. Returns the instance, schedule, and the
-    /// policy's wall-clock µs when `obs_on` (for post-hoc explanation);
-    /// `None` otherwise so the hot path allocates nothing extra.
+    /// Run one decision frame over `scratch.drained`, leaving the
+    /// schedule in `scratch.schedule`. Returns the instance and the
+    /// policy's wall-clock µs when `obs_on` (for post-hoc explanation;
+    /// the caller must recover the lent buffers via
+    /// [`ProblemInstance::into_buffers`]); `None` otherwise, with the
+    /// buffers already recovered, so the hot path allocates nothing.
     #[allow(clippy::too_many_arguments)]
-    fn decide(
+    fn decide<'w>(
         &self,
         now: f64,
-        drained: &[(usize, Pending, f64)],
-        topology: &Topology,
-        catalog: &ServiceCatalog,
-        placement: &Placement,
+        topology: &'w Topology,
+        catalog: &'w ServiceCatalog,
+        placement: &'w Placement,
         edges: &[crate::model::ServerId],
         busy: &mut [f64],
         rng: &mut Rng,
@@ -657,33 +770,50 @@ impl<'a> Des<'a> {
         calendar: &mut BinaryHeap<Reverse<Entry>>,
         seq: &mut u64,
         push: &mut impl FnMut(&mut BinaryHeap<Reverse<Entry>>, &mut u64, f64, Event),
+        scratch: &mut FrameScratch,
         obs_on: bool,
-    ) -> Option<(ProblemInstance, Schedule, f64)> {
-        // Residual-capacity topology for this frame: γ minus in-service
-        // work; η resets each frame (per-frame forwarding budget).
-        let mut frame_topology = topology.clone();
-        for (j, server) in frame_topology.servers.iter_mut().enumerate() {
-            server.gamma = (server.gamma - busy[j]).max(0.0);
-        }
-        let requests: Vec<Request> = drained
-            .iter()
-            .enumerate()
-            .map(|(i, (edge_pos, p, tq))| {
+        reference: bool,
+    ) -> Option<(ProblemInstance<'w>, f64)> {
+        let FrameScratch { drained, requests, residual_gamma, sched, schedule } = scratch;
+        requests.clear();
+        for (i, (edge_pos, p, tq)) in drained.iter().enumerate() {
+            requests.push(
                 Request::new(i, p.service.0, edges[*edge_pos].0)
                     .with_qos(p.a_min, p.c_max)
                     .with_queue_delay(*tq)
-                    .with_payload(p.payload)
-            })
-            .collect();
-        let inst = ProblemInstance::new(
-            frame_topology,
-            catalog.clone(),
-            placement.clone(),
-            requests,
-        )
-        .with_normalization(100.0, self.cfg.scenario.workload.max_completion_ms);
+                    .with_payload(p.payload),
+            );
+        }
+        let frame_requests = std::mem::take(requests);
+        let max_cs = self.cfg.scenario.workload.max_completion_ms;
+        let inst = if reference {
+            // Golden-oracle path (pre-pooling semantics): deep-clone the
+            // world and write the residual γ into the clone.
+            let mut frame_topology = topology.clone();
+            for (j, server) in frame_topology.servers.iter_mut().enumerate() {
+                server.gamma = (server.gamma - busy[j]).max(0.0);
+            }
+            ProblemInstance::new(frame_topology, catalog.clone(), placement.clone(), frame_requests)
+                .with_normalization(100.0, max_cs)
+        } else {
+            // Hot path: borrow the live world; the frame's residual γ
+            // (same float math: subtract in-service work, clamp at zero)
+            // goes into the pooled side slice instead of a topology
+            // clone. η needs no residual — it resets every frame.
+            residual_gamma.clear();
+            for (j, server) in topology.servers.iter().enumerate() {
+                residual_gamma.push((server.gamma - busy[j]).max(0.0));
+            }
+            ProblemInstance::borrowed(topology, catalog, placement, frame_requests)
+                .with_residual_gamma(std::mem::take(residual_gamma))
+                .with_normalization(100.0, max_cs)
+        };
         let sched_t0 = if obs_on { Some(Instant::now()) } else { None };
-        let schedule: Schedule = self.scheduler.schedule(&inst, rng);
+        if reference {
+            *schedule = self.scheduler.schedule(&inst, rng);
+        } else {
+            self.scheduler.schedule_into(&inst, rng, sched, schedule);
+        }
         let schedule_wall_us = sched_t0.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e6);
 
         for (i, (_, p, tq)) in drained.iter().enumerate() {
@@ -722,15 +852,22 @@ impl<'a> Des<'a> {
             }
         }
         if obs_on {
-            Some((inst, schedule, schedule_wall_us))
+            Some((inst, schedule_wall_us))
         } else {
+            let (frame_requests, residual) = inst.into_buffers();
+            *requests = frame_requests;
+            if let Some(r) = residual {
+                *residual_gamma = r;
+            }
             None
         }
     }
 }
 
 /// Sweep offered load for a set of policies (the DES analogue of the
-/// testbed panels, in pure virtual time).
+/// testbed panels, in pure virtual time). Runs are independent per
+/// (policy, rate) cell, so the grid fans out across worker threads;
+/// results are order-stable regardless of thread count.
 pub fn load_sweep(
     base: &DesConfig,
     policy_names: &[&str],
@@ -742,17 +879,27 @@ pub fn load_sweep(
         rates_per_s.to_vec(),
     );
     let nan = vec![f64::NAN; rates_per_s.len()];
-    for name in policy_names {
-        let policy = crate::coordinator::scheduler_by_name(name).expect("unknown policy");
-        let ys: Vec<f64> = rates_per_s
-            .iter()
-            .map(|&rate| {
-                let mut cfg = base.clone();
-                cfg.arrival_rate_per_s = rate;
-                Des::new(cfg, policy.as_ref()).run().satisfied_pct()
-            })
-            .collect();
-        series.push_policy(name, ys, nan.clone());
+    // Resolve every policy up front so an unknown name still panics
+    // eagerly (same contract as the old serial loop).
+    let policies: Vec<_> = policy_names
+        .iter()
+        .map(|name| crate::coordinator::scheduler_by_name(name).expect("unknown policy"))
+        .collect();
+    let mut jobs: Vec<(usize, f64)> = Vec::with_capacity(policies.len() * rates_per_s.len());
+    for pi in 0..policies.len() {
+        for &rate in rates_per_s {
+            jobs.push((pi, rate));
+        }
+    }
+    let threads = crate::sim::montecarlo::default_threads();
+    let ys = crate::benchkit::parallel_map(&jobs, threads, |_, &(pi, rate)| {
+        let mut cfg = base.clone();
+        cfg.arrival_rate_per_s = rate;
+        Des::new(cfg, policies[pi].as_ref()).run().satisfied_pct()
+    });
+    for (pi, name) in policy_names.iter().enumerate() {
+        let row = ys[pi * rates_per_s.len()..(pi + 1) * rates_per_s.len()].to_vec();
+        series.push_policy(name, row, nan.clone());
     }
     series
 }
@@ -793,6 +940,19 @@ mod tests {
         );
         assert_eq!(r.served, r.local + r.cloud + r.peer);
         assert!(r.satisfied <= r.served);
+        r.check_conservation().unwrap();
+    }
+
+    #[test]
+    fn pooled_run_matches_reference_byte_for_byte() {
+        // The allocation-free hot path must be decision-for-decision
+        // identical to the pre-pooling clone-the-world oracle.
+        let gus = Gus::default();
+        for rate in [3.0, 150.0] {
+            let pooled = Des::new(quick_cfg(rate), &gus).run().to_json().dump();
+            let reference = Des::new(quick_cfg(rate), &gus).run_reference().to_json().dump();
+            assert_eq!(pooled, reference, "divergence at rate {rate}");
+        }
     }
 
     #[test]
@@ -891,8 +1051,8 @@ mod tests {
     fn disabled_recorder_keeps_report_byte_identical() {
         let gus = Gus::default();
         let plain = Des::new(quick_cfg(3.0), &gus).run();
-        let rec = Arc::new(Recorder::disabled());
-        let with_disabled = Des::new(quick_cfg(3.0), &gus).with_recorder(rec.clone()).run();
+        let rec = Recorder::disabled();
+        let with_disabled = Des::new(quick_cfg(3.0), &gus).with_recorder(&rec).run();
         assert!(with_disabled.explain.is_empty());
         assert_eq!(rec.total_events(), 0);
         assert_eq!(plain.to_json().dump(), with_disabled.to_json().dump());
@@ -902,8 +1062,8 @@ mod tests {
     fn enabled_recorder_does_not_change_outcomes_and_explains_frames() {
         let gus = Gus::default();
         let plain = Des::new(quick_cfg(150.0), &gus).run();
-        let rec = Arc::new(Recorder::enabled(1 << 14));
-        let traced = Des::new(quick_cfg(150.0), &gus).with_recorder(rec.clone()).run();
+        let rec = Recorder::enabled(1 << 14);
+        let traced = Des::new(quick_cfg(150.0), &gus).with_recorder(&rec).run();
         // Observation must not perturb the simulation.
         assert_eq!(plain.generated, traced.generated);
         assert_eq!(plain.served, traced.served);

@@ -56,10 +56,19 @@ impl<T> AdmissionQueue<T> {
     /// Drain everything for a decision frame, returning (item, T^q) pairs
     /// where T^q = now - arrival.
     pub fn drain(&mut self, now_ms: f64) -> Vec<(T, f64)> {
-        self.items
-            .drain(..)
-            .map(|q| (q.item, (now_ms - q.arrival_ms).max(0.0)))
-            .collect()
+        let mut out = Vec::with_capacity(self.items.len());
+        self.drain_with(now_ms, |item, tq| out.push((item, tq)));
+        out
+    }
+
+    /// Allocation-free drain: invoke `f(item, T^q)` for each queued entry
+    /// in FIFO order. The DES hot path collects into a pooled frame
+    /// buffer through this instead of allocating a Vec per queue per
+    /// frame.
+    pub fn drain_with(&mut self, now_ms: f64, mut f: impl FnMut(T, f64)) {
+        for q in self.items.drain(..) {
+            f(q.item, (now_ms - q.arrival_ms).max(0.0));
+        }
     }
 }
 

@@ -118,7 +118,7 @@ pub struct ScenarioParams {
 }
 
 /// Build a complete `ProblemInstance` for one Monte-Carlo draw.
-pub fn build_instance(params: &ScenarioParams, rng: &mut Rng) -> ProblemInstance {
+pub fn build_instance(params: &ScenarioParams, rng: &mut Rng) -> ProblemInstance<'static> {
     let topology = Topology::paper_default(&params.topology, rng);
     let catalog = ServiceCatalog::synthetic(&params.catalog, rng);
     let classes: Vec<_> = topology.servers.iter().map(|s| s.class).collect();

@@ -1,0 +1,117 @@
+//! Golden same-seed determinism tests for the allocation-free DES hot
+//! path: `Des::run` (borrowed frame instances, pooled buffers) must be
+//! byte-identical to `Des::run_reference` (the pre-pooling
+//! clone-the-world decide loop, kept in-tree as the oracle) — for the
+//! plain world and for every built-in scenario script, with and without
+//! a recorder attached.
+
+use edgeus::coordinator::gus::Gus;
+use edgeus::model::service::CatalogParams;
+use edgeus::model::topology::TopologyParams;
+use edgeus::obs::Recorder;
+use edgeus::scenario::Script;
+use edgeus::sim::{Des, DesConfig, DesReport};
+use edgeus::workload::{ScenarioParams, WorkloadParams};
+
+const HORIZON_MS: f64 = 30_000.0;
+
+/// Small world, overloaded enough that drops and queue-full decisions
+/// occur, with a non-trivial deadline spread.
+fn cfg(script: Option<&str>) -> DesConfig {
+    let topology = TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() };
+    let num_edge = topology.num_edge;
+    DesConfig {
+        scenario: ScenarioParams {
+            topology,
+            catalog: CatalogParams { num_services: 10, num_tiers: 4, ..Default::default() },
+            workload: WorkloadParams {
+                deadline_mean_ms: 4000.0,
+                deadline_std_ms: 2000.0,
+                ..Default::default()
+            },
+        },
+        horizon_ms: HORIZON_MS,
+        arrival_rate_per_s: 40.0,
+        script: script.map(|name| {
+            Script::builtin(name, HORIZON_MS, num_edge)
+                .unwrap_or_else(|| panic!("unknown builtin {name}"))
+        }),
+        ..Default::default()
+    }
+}
+
+/// Every script variant under test: the plain world plus all builtins.
+fn variants() -> Vec<Option<&'static str>> {
+    let mut v = vec![None];
+    v.extend(Script::builtin_names().iter().map(|n| Some(*n)));
+    v
+}
+
+#[test]
+fn pooled_run_matches_reference_for_every_builtin_scenario() {
+    let gus = Gus::default();
+    for script in variants() {
+        let pooled = Des::new(cfg(script), &gus).run();
+        let reference = Des::new(cfg(script), &gus).run_reference();
+        assert!(pooled.generated > 0, "{script:?}: empty run proves nothing");
+        pooled.check_conservation().unwrap_or_else(|e| panic!("{script:?}: {e}"));
+        assert_eq!(
+            pooled.to_json().dump(),
+            reference.to_json().dump(),
+            "divergence under {script:?}"
+        );
+    }
+}
+
+#[test]
+fn pooled_run_matches_reference_with_disabled_recorder() {
+    let gus = Gus::default();
+    for script in variants() {
+        let rec_a = Recorder::disabled();
+        let rec_b = Recorder::disabled();
+        let pooled = Des::new(cfg(script), &gus).with_recorder(&rec_a).run();
+        let reference = Des::new(cfg(script), &gus).with_recorder(&rec_b).run_reference();
+        assert_eq!(
+            pooled.to_json().dump(),
+            reference.to_json().dump(),
+            "divergence under {script:?} with a disabled recorder"
+        );
+    }
+}
+
+/// `schedule_wall_us` is genuine wall-clock, so instrumented dumps are
+/// compared with it zeroed; everything else must match exactly.
+fn zero_wall(mut report: DesReport) -> DesReport {
+    for e in &mut report.explain {
+        e.schedule_wall_us = 0.0;
+    }
+    report
+}
+
+#[test]
+fn pooled_run_matches_reference_with_enabled_recorder() {
+    let gus = Gus::default();
+    for script in variants() {
+        let rec_a = Recorder::enabled(1 << 14);
+        let rec_b = Recorder::enabled(1 << 14);
+        let pooled = zero_wall(Des::new(cfg(script), &gus).with_recorder(&rec_a).run());
+        let reference =
+            zero_wall(Des::new(cfg(script), &gus).with_recorder(&rec_b).run_reference());
+        assert!(!pooled.explain.is_empty(), "{script:?}: instrumented run must explain");
+        assert_eq!(
+            pooled.to_json().dump(),
+            reference.to_json().dump(),
+            "divergence under {script:?} with an enabled recorder"
+        );
+    }
+}
+
+#[test]
+fn pooled_run_is_deterministic_across_repeats() {
+    let gus = Gus::default();
+    for script in variants() {
+        let a = Des::new(cfg(script), &gus).run().to_json().dump();
+        let b = Des::new(cfg(script), &gus).run().to_json().dump();
+        assert_eq!(a, b, "same-seed rerun differs under {script:?}");
+    }
+}

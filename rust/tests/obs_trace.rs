@@ -12,7 +12,6 @@ use edgeus::scenario::{EventKind, Script, ScriptedEvent};
 use edgeus::sim::{Des, DesConfig};
 use edgeus::util::json::Json;
 use edgeus::workload::{ScenarioParams, WorkloadParams};
-use std::sync::Arc;
 
 /// Small but non-trivial world: enough load that drops occur, short
 /// enough that the suite stays fast.
@@ -32,8 +31,8 @@ fn cfg(rate: f64) -> DesConfig {
 #[test]
 fn chrome_trace_round_trips_and_counts_requests() {
     let gus = Gus::default();
-    let recorder = Arc::new(Recorder::enabled(1 << 14));
-    let report = Des::new(cfg(30.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+    let recorder = Recorder::enabled(1 << 14);
+    let report = Des::new(cfg(30.0), &gus).with_recorder(&recorder).run();
 
     let trace = chrome_trace(&recorder);
     let dump = trace.dump();
@@ -60,9 +59,9 @@ fn chrome_trace_round_trips_and_counts_requests() {
 #[test]
 fn prometheus_export_carries_drop_reasons() {
     let gus = Gus::default();
-    let recorder = Arc::new(Recorder::enabled(1 << 14));
+    let recorder = Recorder::enabled(1 << 14);
     // Overload hard so scheduler drops are guaranteed.
-    let report = Des::new(cfg(150.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+    let report = Des::new(cfg(150.0), &gus).with_recorder(&recorder).run();
     assert!(report.dropped + report.rejected_at_queue > 0, "overload must drop");
 
     let text = prometheus(&recorder);
@@ -90,8 +89,8 @@ fn prometheus_export_carries_drop_reasons() {
 fn disabled_recorder_is_byte_identical_to_absent() {
     let gus = Gus::default();
     let plain = Des::new(cfg(30.0), &gus).run();
-    let recorder = Arc::new(Recorder::disabled());
-    let traced = Des::new(cfg(30.0), &gus).with_recorder(Arc::clone(&recorder)).run();
+    let recorder = Recorder::disabled();
+    let traced = Des::new(cfg(30.0), &gus).with_recorder(&recorder).run();
     assert_eq!(plain.to_json().dump(), traced.to_json().dump());
     assert_eq!(recorder.total_events(), 0);
     assert!(traced.explain.is_empty(), "explanations only with an enabled recorder");
@@ -108,8 +107,8 @@ fn scenario_events_become_trace_markers() {
             ScriptedEvent { at_ms: 12_000.0, kind: EventKind::ServerUp { server: 0 } },
         ],
     ));
-    let recorder = Arc::new(Recorder::enabled(1 << 14));
-    let _ = Des::new(c, &gus).with_recorder(Arc::clone(&recorder)).run();
+    let recorder = Recorder::enabled(1 << 14);
+    let _ = Des::new(c, &gus).with_recorder(&recorder).run();
     let names: Vec<&str> = recorder
         .events()
         .iter()
@@ -126,8 +125,8 @@ fn scenario_events_become_trace_markers() {
 #[test]
 fn explanations_cover_every_decision_frame() {
     let gus = Gus::default();
-    let recorder = Arc::new(Recorder::enabled(1 << 14));
-    let report = Des::new(cfg(150.0), &gus).with_recorder(recorder).run();
+    let recorder = Recorder::enabled(1 << 14);
+    let report = Des::new(cfg(150.0), &gus).with_recorder(&recorder).run();
     assert_eq!(report.explain.len() as u64, report.decisions);
     let explained_drops: u64 = report.explain.iter().map(|f| f.total_drops()).sum();
     assert_eq!(explained_drops, report.dropped);

@@ -11,7 +11,7 @@ use edgeus::util::prop::{self, Gen};
 use edgeus::workload::WorkloadParams;
 
 /// Draw a random-but-valid scenario from the generator.
-fn random_instance(g: &mut Gen) -> ProblemInstance {
+fn random_instance(g: &mut Gen) -> ProblemInstance<'static> {
     let scenario = ScenarioParams {
         topology: TopologyParams {
             num_edge: g.usize_in(1..8),
@@ -198,6 +198,44 @@ fn prop_tightening_deadline_never_helps() {
         }
         let tight = Gus::default().schedule(&inst, &mut Rng::new(7));
         assert!(tight.satisfied(&inst) <= loose.served());
+    });
+}
+
+#[test]
+fn prop_flash_crowd_never_oversubscribes_capacity_and_conserves_requests() {
+    use edgeus::scenario::Script;
+    use edgeus::sim::{Des, DesConfig};
+    // DES invariants under the flash-crowd surge, across random seeds and
+    // offered loads: the committed in-service work never exceeds the live
+    // γ (schedulers only commit against the frame residual), and the
+    // report's conservation invariants hold at every decision boundary.
+    prop::check(8, |g| {
+        let horizon_ms = 30_000.0;
+        let mut cfg = DesConfig {
+            scenario: ScenarioParams {
+                topology: TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+                catalog: CatalogParams { num_services: 8, num_tiers: 3, ..Default::default() },
+                workload: WorkloadParams::default(),
+            },
+            horizon_ms,
+            arrival_rate_per_s: g.f64_in(4.0..40.0),
+            seed: g.u64_in(0..1 << 32),
+            ..Default::default()
+        };
+        cfg.script = Script::builtin("flash-crowd", horizon_ms, cfg.scenario.topology.num_edge);
+        assert!(cfg.script.is_some(), "flash-crowd is a builtin");
+        let gus = Gus::default();
+        let report = Des::new(cfg, &gus).run();
+        report.check_conservation().unwrap();
+        // flash-crowd scripts no outages, so live γ never shrinks and
+        // utilization > 1 would mean a genuine capacity overdraw.
+        for (k, f) in report.frames.iter().enumerate() {
+            assert!(
+                f.capacity_utilization <= 1.0 + 1e-9,
+                "frame {k}: committed busy exceeds live γ ({})",
+                f.capacity_utilization
+            );
+        }
     });
 }
 
