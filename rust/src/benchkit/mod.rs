@@ -43,7 +43,7 @@ where
     });
     slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("parallel_map worker completed"))
+        .map(|m| m.into_inner().unwrap().expect("parallel_map worker completed")) // lint:allow(unwrap) — propagate worker panics
         .collect()
 }
 

@@ -40,7 +40,7 @@ fn ranked_on_server_into(
             ));
         }
     }
-    ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    ranked.sort_by(|a, b| b.0.total_cmp(&a.0));
 }
 
 fn try_assign(
@@ -115,7 +115,7 @@ impl Scheduler for OffloadAll {
                 ranked_on_server_into(inst, i, c, cands, ranked_tmp);
                 ranked.extend_from_slice(ranked_tmp);
             }
-            ranked.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            ranked.sort_by(|a, b| b.0.total_cmp(&a.0));
             try_assign(out, tracker, req, i, ranked);
         }
     }

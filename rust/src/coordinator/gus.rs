@@ -60,6 +60,8 @@ impl Gus {
         order: &mut Vec<usize>,
         out: &mut Schedule,
     ) {
+        // lint:no-alloc:begin — Algorithm 1's inner loop; buffers arrive
+        // warm from the previous frame.
         out.reset(inst.num_requests());
         // Requests are considered highest-priority-first (paper §V future
         // work); within a priority class, submission order (the paper's
@@ -87,8 +89,7 @@ impl Gus {
             // Sort by US descending; ties broken toward local processing
             // (no η spend), then lower tier (cheaper γ).
             ranked.sort_by(|a, b| {
-                b.0.partial_cmp(&a.0)
-                    .unwrap()
+                b.0.total_cmp(&a.0)
                     .then_with(|| a.1.offloaded.cmp(&b.1.offloaded))
                     .then_with(|| a.1.tier.cmp(&b.1.tier))
             });
@@ -104,6 +105,7 @@ impl Gus {
                 }
             }
         }
+        // lint:no-alloc:end
     }
 }
 

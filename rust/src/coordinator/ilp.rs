@@ -132,7 +132,7 @@ impl BranchAndBound {
                 // gives 0), so discard them.
                 .filter(|(us, _)| *us >= 0.0)
                 .collect();
-            opts.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            opts.sort_by(|a, b| b.0.total_cmp(&a.0));
             options.push(opts);
         }
         let mut suffix_best = vec![0.0; n + 1];

@@ -42,6 +42,7 @@ pub mod scenario;
 pub mod serving;
 pub mod sim;
 pub mod util;
+pub mod verify;
 pub mod workload;
 
 /// Common imports for examples and benches.
@@ -63,5 +64,6 @@ pub mod prelude {
     pub use crate::scenario::{run_sweep, Script, SweepConfig};
     pub use crate::sim::{Des, DesConfig, DesReport, FrameExplain, MonteCarlo, PolicyStats};
     pub use crate::util::rng::Rng;
+    pub use crate::verify::{Diagnostics, Severity};
     pub use crate::workload::{build_instance, ScenarioParams, WorkloadParams};
 }

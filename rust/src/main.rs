@@ -7,6 +7,7 @@
 //! edgeus optimal-gap [--sizes 4,6,8,10] [--instances 20]
 //! edgeus simulate [--config cfg.json]
 //! edgeus scenario --name flash-crowd [--policies gus,local-all] [--seeds 8]
+//! edgeus verify  world.json [--kind world|script|schedule] [--json]
 //! edgeus info    [--artifacts artifacts]
 //! ```
 
@@ -30,6 +31,7 @@ fn main() {
         Some("des") => cmd_des(&args),
         Some("scenario") => cmd_scenario(&args),
         Some("trace") => cmd_trace(&args),
+        Some("verify") => cmd_verify(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown subcommand: {other}");
@@ -62,6 +64,8 @@ fn print_usage() {
          [--script FILE.json] [--policies gus,local-all] [--seeds 8] [--seed 7]\n           \
          [--rate 8] [--horizon-s 120] [--threads N] [--save FILE.json] [--csv PATH] [--list]\n  \
          trace [--out trace.json] [--rate 4] [--horizon-s 60] | [--stats FILE]\n  \
+         verify FILE.json [--kind world|script|schedule] [--json] [--strict]\n          \
+         [--horizon-s H] [--rate R] — static checks, exit 1 on errors\n  \
          info [--artifacts DIR]\n\
          observability (des, scenario, serve, testbed):\n  \
          [--trace-out T.json] [--metrics-out M.prom] [--trace-capacity 65536]\n  \
@@ -122,6 +126,67 @@ fn run_instrumented_des(
     write_obs_outputs(args, &recorder)
 }
 
+/// Fail fast on inputs the static verifier rejects: every diagnostic is
+/// printed to stderr (warnings/infos are advisory), and any error-level
+/// finding aborts before simulation state is built — `des`, `scenario`,
+/// and `serve` all fail with the same diagnostics as `edgeus verify`.
+fn gate_diagnostics(what: &str, d: &edgeus::verify::Diagnostics) -> Result<()> {
+    use edgeus::verify::Severity;
+    if d.is_empty() {
+        return Ok(());
+    }
+    eprint!("{}", d.render_text());
+    if d.has_errors() {
+        anyhow::bail!(
+            "{what} failed verification with {} error(s) (see diagnostics above)",
+            d.count(Severity::Error)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    use edgeus::verify::{verify_file, DocKind, Severity, VerifyOptions};
+    let path = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .or_else(|| args.get("file"))
+        .context("usage: edgeus verify <world|script|schedule>.json [--kind K] [--json] [--strict]")?;
+    let kind = match args.get("kind") {
+        Some(k) => {
+            Some(DocKind::parse(k).with_context(|| format!("unknown --kind {k} (world|script|schedule)"))?)
+        }
+        None => None,
+    };
+    let opts = VerifyOptions {
+        kind,
+        horizon_ms: args.get("horizon-s").and_then(|s| s.parse::<f64>().ok()).map(|h| h * 1e3),
+        arrival_rate_per_s: args.get("rate").and_then(|s| s.parse().ok()),
+        shape: None,
+    };
+    let d = verify_file(path, &opts);
+    if args.flag("json") {
+        // Byte-stable: diagnostics are sorted and keys render in a fixed
+        // order, so CI can diff this output meaningfully.
+        println!("{}", d.to_json().pretty());
+    } else if d.is_empty() {
+        println!("{path}: OK (0 diagnostics)");
+    } else {
+        print!("{}", d.render_text());
+        println!(
+            "{path}: {} error(s), {} warning(s), {} info",
+            d.count(Severity::Error),
+            d.count(Severity::Warning),
+            d.count(Severity::Info)
+        );
+    }
+    if d.has_errors() || (args.flag("strict") && !d.is_empty()) {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn cmd_scenario(args: &Args) -> Result<()> {
     use edgeus::scenario::{run_sweep, timeline_series, Script, SweepConfig};
     if args.flag("list") {
@@ -141,17 +206,23 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     let num_seeds = args.get_usize("seeds", 8);
     anyhow::ensure!(num_seeds > 0, "--seeds must be at least 1");
     let script = match args.get("script") {
-        Some(path) => {
-            let s = Script::load(path)?;
-            s.validate(
-                base.scenario.topology.num_edge + base.scenario.topology.num_cloud,
-                base.scenario.topology.num_edge,
-                base.scenario.catalog.num_services,
-                base.scenario.catalog.num_tiers,
-            )
-            .map_err(|e| anyhow::anyhow!("invalid script {path}: {e}"))?;
-            s
-        }
+        Some(path) => match Script::load(path) {
+            Ok(s) => s,
+            // A bad script path/file is a user-input problem, not an
+            // internal error: one diagnostic line, non-zero exit.
+            Err(e) => {
+                use edgeus::verify::{Code, Diagnostics};
+                let code = if std::path::Path::new(path).exists() {
+                    Code::ParseError
+                } else {
+                    Code::FileUnreadable
+                };
+                let mut d = Diagnostics::new();
+                d.push(code, path, format!("{e:#}"));
+                eprint!("{}", d.render_text());
+                std::process::exit(1);
+            }
+        },
         None => {
             let name = args.get_or("name", "flash-crowd");
             Script::builtin(name, base.horizon_ms, base.scenario.topology.num_edge)
@@ -172,6 +243,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         );
     }
     base.script = Some(script.clone());
+    gate_diagnostics("scenario config", &edgeus::verify::verify_des_config(&base, &[]))?;
     let cfg = SweepConfig {
         base,
         policies,
@@ -231,6 +303,7 @@ fn cmd_des(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", defaults.seed),
         ..defaults
     };
+    gate_diagnostics("des config", &edgeus::verify::verify_des_config(&base, &rates))?;
     eprintln!("discrete-event load sweep: rates {rates:?} req/s over {}s", base.horizon_ms / 1e3);
     let series = edgeus::sim::des::load_sweep(&base, &policy_refs, &rates);
     println!("\n# DES — satisfied users (%) vs offered load\n\n{}", series.to_markdown());
@@ -355,6 +428,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         min_accuracy_pct: args.get_f64("min-accuracy", defaults.min_accuracy_pct),
         ..defaults
     };
+    gate_diagnostics("serving config", &edgeus::verify::verify_serving_config(&cfg))?;
     eprintln!(
         "serving {} requests with {} (time scale {}x)...",
         cfg.total_requests, cfg.scheduler, cfg.time_scale

@@ -129,6 +129,8 @@ impl<'w> ProblemInstance<'w> {
         self
     }
 
+    // lint:no-alloc:begin — capacity accessors sit inside every
+    // scheduler's inner loop.
     /// Effective computation capacity γ_j for this instance: the
     /// per-frame residual when one is attached, else the topology's
     /// steady-state value.
@@ -146,6 +148,7 @@ impl<'w> ProblemInstance<'w> {
     pub fn eta(&self, j: usize) -> f64 {
         self.topology.servers[j].eta
     }
+    // lint:no-alloc:end
 
     /// Tear down the instance and hand its owned buffers back to the
     /// caller, so a pooled hot path (DES `FrameScratch`) can reuse their
@@ -191,6 +194,9 @@ impl<'w> ProblemInstance<'w> {
     /// The buffer form is the hot-path API: schedulers reuse one
     /// `Vec<Candidate>` across every request of every frame, so the
     /// steady-state enumeration cost is pure writes into warm capacity.
+    // lint:no-alloc:begin — candidate enumeration writes into warm
+    // caller-owned capacity only (`for_each_tier` replaces the old
+    // per-call `tiers_of` Vec).
     pub fn candidates_into(&self, i: usize, out: &mut Vec<Candidate>) {
         out.clear();
         let req = &self.requests[i];
@@ -199,23 +205,22 @@ impl<'w> ProblemInstance<'w> {
                 continue;
             }
             let server = ServerId(j);
-            for tier in self
-                .placement
-                .tiers_of(j, req.service, self.catalog.num_tiers)
-            {
-                let profile = self.catalog.profile(req.service, tier);
-                out.push(Candidate {
-                    server,
-                    tier,
-                    accuracy_pct: profile.accuracy_pct,
-                    completion_ms: self.completion_ms(req, server, tier),
-                    comp_cost: profile.comp_cost,
-                    comm_cost: profile.comm_cost,
-                    offloaded: server != req.covering,
+            self.placement
+                .for_each_tier(j, req.service, self.catalog.num_tiers, |tier| {
+                    let profile = self.catalog.profile(req.service, tier);
+                    out.push(Candidate {
+                        server,
+                        tier,
+                        accuracy_pct: profile.accuracy_pct,
+                        completion_ms: self.completion_ms(req, server, tier),
+                        comp_cost: profile.comp_cost,
+                        comm_cost: profile.comm_cost,
+                        offloaded: server != req.covering,
+                    });
                 });
-            }
         }
     }
+    // lint:no-alloc:end
 
     /// Allocating convenience wrapper around [`Self::candidates_into`].
     pub fn candidates(&self, i: usize) -> Vec<Candidate> {

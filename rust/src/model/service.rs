@@ -240,6 +240,30 @@ impl Placement {
             .collect()
     }
 
+    /// Visit the tiers of service k available on `server`, ascending,
+    /// without allocating — the hot-path form of [`Self::tiers_of`]
+    /// (candidate enumeration calls this once per request per server).
+    #[inline]
+    pub fn for_each_tier(
+        &self,
+        server: usize,
+        k: ServiceId,
+        num_tiers: usize,
+        mut f: impl FnMut(TierId),
+    ) {
+        if self.cloud_has_all[server] {
+            for l in 0..num_tiers {
+                f(TierId(l));
+            }
+            return;
+        }
+        for (kk, l) in self.on[server].iter() {
+            if *kk == k {
+                f(*l);
+            }
+        }
+    }
+
     /// Add one (service, tier) replica on `server` (idempotent). On a
     /// cloud-has-all server this is a no-op: it already holds everything.
     /// Used by the scenario engine's `PlacementChange` events.

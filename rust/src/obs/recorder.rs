@@ -260,7 +260,7 @@ impl Recorder {
     pub fn counter_value(&self, name: &str, label_key: &str, label_val: &str) -> f64 {
         self.inner
             .lock()
-            .unwrap()
+            .unwrap() // lint:allow(unwrap) — mutex poisoning is fatal by design
             .counters
             .iter()
             .find(|((n, lk, lv), _)| *n == name && *lk == label_key && *lv == label_val)

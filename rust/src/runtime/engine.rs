@@ -132,7 +132,7 @@ impl InferenceResult {
                 let row = &self.logits[b * self.num_classes..(b + 1) * self.num_classes];
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0)
             })

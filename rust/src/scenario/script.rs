@@ -123,6 +123,42 @@ pub struct Script {
 pub const BUILTIN_NAMES: [&str; 4] =
     ["flash-crowd", "edge-failover", "degraded-backhaul", "commuter-wave"];
 
+/// Every JSON `type` tag, in declaration order (shared with `verify`).
+pub const EVENT_TYPES: [&str; 6] = [
+    "load_burst",
+    "server_down",
+    "server_up",
+    "bandwidth_drift",
+    "user_mobility",
+    "placement_change",
+];
+
+/// The exact field set an event object of the given `type` may carry.
+/// `None` for unknown types. Parsing is strict: anything outside this
+/// list is a hard error, not a silent skip (a typoed `durationms`
+/// must not quietly become an infinite burst).
+pub fn allowed_event_fields(ty: &str) -> Option<&'static [&'static str]> {
+    match ty {
+        "load_burst" => Some(&["at_ms", "type", "rate_multiplier", "duration_ms"]),
+        "server_down" | "server_up" => Some(&["at_ms", "type", "server"]),
+        "bandwidth_drift" => Some(&["at_ms", "type", "link", "factor"]),
+        "user_mobility" => Some(&["at_ms", "type", "from_edge", "to_edge", "fraction"]),
+        "placement_change" => Some(&["at_ms", "type", "server", "service", "tier", "add"]),
+        _ => None,
+    }
+}
+
+/// Best-effort byte location of a quoted token in the source text, for
+/// span-ish parse errors (the parsed `Json` tree does not retain
+/// offsets; the raw text does).
+fn span_note(src: Option<&str>, token: &str) -> String {
+    let Some(text) = src else { return String::new() };
+    match text.find(&format!("\"{token}\"")) {
+        Some(off) => format!(" (byte {off})"),
+        None => String::new(),
+    }
+}
+
 impl Script {
     /// Build a script; events are sorted by trigger time (stable, so
     /// same-timestamp events keep authoring order).
@@ -331,6 +367,13 @@ impl Script {
     }
 
     pub fn from_json(j: &Json) -> Result<Script> {
+        Script::from_json_with_src(j, None)
+    }
+
+    /// Strict parse from an already-parsed tree. When `src` (the raw
+    /// JSON text) is available, unknown-type/field errors carry the
+    /// byte offset of the offending token.
+    fn from_json_with_src(j: &Json, src: Option<&str>) -> Result<Script> {
         let name = j.get("name").as_str().unwrap_or("unnamed").to_string();
         let mut events = Vec::new();
         for (i, ev) in j
@@ -342,6 +385,25 @@ impl Script {
         {
             let at_ms = ev.get("at_ms").as_f64().with_context(|| format!("event {i}: at_ms"))?;
             let ty = ev.get("type").as_str().with_context(|| format!("event {i}: type"))?;
+            let allowed = match allowed_event_fields(ty) {
+                Some(a) => a,
+                None => bail!(
+                    "event {i}: unknown event type {ty:?}{} (expected one of {})",
+                    span_note(src, ty),
+                    EVENT_TYPES.join(", ")
+                ),
+            };
+            if let Some(obj) = ev.as_obj() {
+                for key in obj.keys() {
+                    if !allowed.contains(&key.as_str()) {
+                        bail!(
+                            "event {i}: unknown field {key:?} for {ty}{} (allowed: {})",
+                            span_note(src, key),
+                            allowed.join(", ")
+                        );
+                    }
+                }
+            }
             let kind = match ty {
                 "load_burst" => EventKind::LoadBurst {
                     rate_multiplier: ev
@@ -385,10 +447,18 @@ impl Script {
             .with_context(|| format!("writing {path}"))
     }
 
+    /// Parse a script from raw JSON text. Errors carry byte offsets:
+    /// malformed JSON reports the parser's exact position, and unknown
+    /// event types/fields report the offending token's location.
+    pub fn parse(text: &str) -> Result<Script> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Script::from_json_with_src(&j, Some(text))
+    }
+
     pub fn load(path: &str) -> Result<Script> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Script::from_json(&Json::parse(&text).with_context(|| format!("parsing {path}"))?)
+        Script::parse(&text).with_context(|| format!("parsing {path}"))
     }
 }
 
@@ -512,6 +582,43 @@ mod tests {
         // Degenerate small worlds fall back to the last edge.
         let s = Script::builtin("edge-failover", 60_000.0, 2).unwrap();
         assert!(s.events.iter().any(|e| e.kind == EventKind::ServerDown { server: 1 }));
+    }
+
+    #[test]
+    fn unknown_event_type_is_a_hard_error_with_offset() {
+        let text = r#"{"name":"x","events":[{"at_ms":0,"type":"sever_down","server":1}]}"#;
+        let err = Script::parse(text).unwrap_err().to_string();
+        assert!(err.contains("unknown event type \"sever_down\""), "{err}");
+        let off = text.find("\"sever_down\"").unwrap();
+        assert!(err.contains(&format!("byte {off}")), "{err}");
+    }
+
+    #[test]
+    fn unknown_event_field_is_a_hard_error_with_offset() {
+        let text =
+            r#"{"name":"x","events":[{"at_ms":0,"type":"load_burst","rate_multiplier":2,"durationms":5}]}"#;
+        let err = Script::parse(text).unwrap_err().to_string();
+        assert!(err.contains("unknown field \"durationms\""), "{err}");
+        let off = text.find("\"durationms\"").unwrap();
+        assert!(err.contains(&format!("byte {off}")), "{err}");
+        // from_json (no source text) still rejects, just without a span.
+        let j = Json::parse(text).unwrap();
+        assert!(Script::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn malformed_json_reports_parser_offset() {
+        let err = Script::parse(r#"{"name":"x","events":[{]}"#).unwrap_err().to_string();
+        assert!(err.contains("byte"), "{err}");
+    }
+
+    #[test]
+    fn every_builtin_survives_strict_round_trip() {
+        for name in Script::builtin_names() {
+            let s = Script::builtin(name, 60_000.0, 9).unwrap();
+            let parsed = Script::parse(&s.to_json().pretty()).unwrap();
+            assert_eq!(s, parsed, "{name}");
+        }
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<PolicySweep> {
         .collect();
     let reports = parallel_map(&jobs, cfg.threads, |_, &(pi, seed)| {
         let policy =
-            scheduler_by_name(&cfg.policies[pi]).expect("unknown policy in scenario sweep");
+            scheduler_by_name(&cfg.policies[pi]).expect("unknown policy in scenario sweep"); // lint:allow(unwrap) — policy names validated at config load
         let mut run_cfg = cfg.base.clone();
         run_cfg.seed = seed;
         Des::new(run_cfg, policy.as_ref()).run()
@@ -70,7 +70,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Vec<PolicySweep> {
     for policy in &cfg.policies {
         let mut agg = PolicySweep { policy: policy.clone(), ..Default::default() };
         for _ in 0..cfg.num_seeds {
-            let r = it.next().expect("one report per job");
+            let r = it.next().expect("one report per job"); // lint:allow(unwrap) — jobs list is policy-major by construction
             let n = r.generated.max(1) as f64;
             agg.satisfied_pct.push(r.satisfied_pct());
             agg.served_pct.push(100.0 * r.served as f64 / n);

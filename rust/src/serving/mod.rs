@@ -176,7 +176,7 @@ impl ServingSystem {
 
     fn placement(&self) -> Placement {
         let cfg = &self.cfg;
-        let tier_idx = |name: &str| TierId(self.tiers.iter().position(|t| t == name).unwrap());
+        let tier_idx = |name: &str| TierId(self.tiers.iter().position(|t| t == name).unwrap()); // lint:allow(unwrap) — self.tiers is built from these same names
         let mut on = Vec::new();
         let mut cloud_flags = Vec::new();
         for _ in 0..cfg.num_edge {
@@ -547,7 +547,7 @@ impl ServingSystem {
             dispatch_threads.retain(|h| !h.is_finished());
         }
 
-        generator.join().expect("generator panicked");
+        generator.join().expect("generator panicked"); // lint:allow(unwrap) — propagate worker panics
         for h in dispatch_threads {
             let _ = h.join();
         }

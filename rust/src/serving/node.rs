@@ -97,7 +97,7 @@ impl InferenceHandle {
         }
         drop(ready_tx);
         for _ in 0..n {
-            ready_rx.recv().expect("engine thread died during load")?;
+            ready_rx.recv().expect("engine thread died during load")?; // lint:allow(unwrap) — propagate engine-thread panics
         }
         Ok(InferenceHandle { tx, joins })
     }

@@ -376,8 +376,7 @@ impl Eq for Entry {}
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.at_ms
-            .partial_cmp(&other.at_ms)
-            .unwrap()
+            .total_cmp(&other.at_ms)
             .then(self.seq.cmp(&other.seq))
     }
 }
@@ -499,6 +498,9 @@ impl<'a> Des<'a> {
         push(&mut calendar, &mut seq, rng.uniform(0.0, gap), Event::Arrival);
         push(&mut calendar, &mut seq, self.cfg.frame_ms, Event::Decision);
 
+        // lint:no-alloc:begin — DES event loop: every buffer is warm by
+        // here; steady state must not allocate (PR 3's ≥3× speedup gate
+        // assumes it, `tools/lint.rs` enforces it in CI).
         while let Some(Reverse(entry)) = calendar.pop() {
             let now = entry.at_ms;
             match entry.event {
@@ -747,6 +749,7 @@ impl<'a> Des<'a> {
                 }
             }
         }
+        // lint:no-alloc:end
         report
     }
 
@@ -774,6 +777,9 @@ impl<'a> Des<'a> {
         obs_on: bool,
         reference: bool,
     ) -> Option<(ProblemInstance<'w>, f64)> {
+        // lint:no-alloc:begin — per-frame decision: pooled buffers only.
+        // The `reference` branch is the cold golden-oracle path and is
+        // exempted line-by-line.
         let FrameScratch { drained, requests, residual_gamma, sched, schedule } = scratch;
         requests.clear();
         for (i, (edge_pos, p, tq)) in drained.iter().enumerate() {
@@ -789,11 +795,11 @@ impl<'a> Des<'a> {
         let inst = if reference {
             // Golden-oracle path (pre-pooling semantics): deep-clone the
             // world and write the residual γ into the clone.
-            let mut frame_topology = topology.clone();
+            let mut frame_topology = topology.clone(); // lint:allow(alloc)
             for (j, server) in frame_topology.servers.iter_mut().enumerate() {
                 server.gamma = (server.gamma - busy[j]).max(0.0);
             }
-            ProblemInstance::new(frame_topology, catalog.clone(), placement.clone(), frame_requests)
+            ProblemInstance::new(frame_topology, catalog.clone(), placement.clone(), frame_requests) // lint:allow(alloc)
                 .with_normalization(100.0, max_cs)
         } else {
             // Hot path: borrow the live world; the frame's residual γ
@@ -861,6 +867,7 @@ impl<'a> Des<'a> {
             }
             None
         }
+        // lint:no-alloc:end
     }
 }
 
@@ -883,7 +890,7 @@ pub fn load_sweep(
     // eagerly (same contract as the old serial loop).
     let policies: Vec<_> = policy_names
         .iter()
-        .map(|name| crate::coordinator::scheduler_by_name(name).expect("unknown policy"))
+        .map(|name| crate::coordinator::scheduler_by_name(name).expect("unknown policy")) // lint:allow(unwrap) — caller passes names from the vetted policy list
         .collect();
     let mut jobs: Vec<(usize, f64)> = Vec::with_capacity(policies.len() * rates_per_s.len());
     for pi in 0..policies.len() {

@@ -123,7 +123,7 @@ impl MonteCarlo {
                 }));
             }
             for h in handles {
-                partials.push(h.join().expect("monte-carlo worker panicked"));
+                partials.push(h.join().expect("monte-carlo worker panicked")); // lint:allow(unwrap) — propagate worker panics
             }
         });
         let mut merged: Vec<PolicyStats> = Vec::new();

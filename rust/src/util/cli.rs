@@ -33,8 +33,9 @@ impl Args {
                 if let Some((k, v)) = stripped.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
-                    args.flags.insert(stripped.to_string(), v);
+                    if let Some(v) = it.next() {
+                        args.flags.insert(stripped.to_string(), v);
+                    }
                 } else {
                     args.flags.insert(stripped.to_string(), FLAG_SET.to_string());
                 }

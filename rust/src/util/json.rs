@@ -355,7 +355,7 @@ impl<'a> Parser<'a> {
                     // Consume one UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().unwrap(); // lint:allow(unwrap) — from_utf8 succeeded on a non-empty slice
                     s.push(c);
                     self.i += c.len_utf8();
                 }
@@ -386,7 +386,7 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let text = std::str::from_utf8(&self.b[start..self.i]).unwrap(); // lint:allow(unwrap) — number span is pure ASCII by construction
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("invalid number"))

@@ -1,0 +1,325 @@
+//! The diagnostic substrate shared by every `edgeus verify` checker:
+//! stable codes, fixed severities, and byte-stable rendering (sorted
+//! text and JSON) so CI diffs of verifier output are meaningful.
+//!
+//! The code table is documented in DESIGN.md §Static-Analysis; every
+//! code has exactly one minimal failing fixture under
+//! `rust/tests/fixtures/verify/` (enforced by `tests/verify_cli.rs`).
+
+use crate::util::json::Json;
+
+/// Diagnostic severity, ordered most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+    Info,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// Every diagnostic the verifier can emit. Codes are append-only: once
+/// published in DESIGN.md they never change meaning or severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    /// E001 — server index out of range.
+    ServerIndex,
+    /// E002 — edge index out of range (user mobility targets edges).
+    EdgeIndex,
+    /// E003 — service index out of range.
+    ServiceIndex,
+    /// E004 — tier index out of range.
+    TierIndex,
+    /// E005 — non-finite or negative event trigger time.
+    EventTime,
+    /// E006 — `server_down` on a server that is already down.
+    DownWhileDown,
+    /// E007 — `server_up` on a server that is not down.
+    UpWhileUp,
+    /// E008 — invalid bandwidth-drift link pair (self link or out of range).
+    LinkPair,
+    /// E009 — mobility fraction outside [0, 1] or from_edge == to_edge.
+    Mobility,
+    /// E010 — load burst with non-positive multiplier or negative duration.
+    LoadBurst,
+    /// E011 — unknown event type.
+    UnknownEvent,
+    /// E012 — unknown field on an event object.
+    UnknownField,
+    /// E013 — world has no edge servers (users cannot be covered).
+    NoEdges,
+    /// E014 — parameter out of its valid range (non-positive capacity,
+    /// count, rate, or percentage outside [0, 100]).
+    BadParam,
+    /// E015 — inverted band: a `lo` bound above its `hi` bound.
+    InvertedBand,
+    /// E016 — schedule assigns the same request twice.
+    DuplicateAssignment,
+    /// E017 — schedule assigns a request to a down server.
+    DownServerAssignment,
+    /// E018 — schedule's summed computation cost overflows a server's γ.
+    GammaOverflow,
+    /// E019 — input file missing or unreadable.
+    FileUnreadable,
+    /// E020 — malformed JSON or unrecognized document structure.
+    ParseError,
+    /// W101 — offered demand exceeds aggregate service capacity per frame.
+    DemandExceedsCapacity,
+    /// W102 — an up server with zero γ: placements there can never serve.
+    ZeroGamma,
+    /// W103 — deadline pre-screen: the mean deadline is below the fastest
+    /// possible completion on any reachable server.
+    DeadlineInfeasible,
+    /// W104 — event scheduled at or beyond the run horizon (never fires).
+    EventBeyondHorizon,
+    /// W105 — `server_down` with no matching `server_up` (permanent outage).
+    PermanentOutage,
+    /// I201 — script contains no events.
+    EmptyScript,
+}
+
+impl Code {
+    /// Every code, in code order (used by the fixture-coverage test).
+    pub const ALL: [Code; 26] = [
+        Code::ServerIndex,
+        Code::EdgeIndex,
+        Code::ServiceIndex,
+        Code::TierIndex,
+        Code::EventTime,
+        Code::DownWhileDown,
+        Code::UpWhileUp,
+        Code::LinkPair,
+        Code::Mobility,
+        Code::LoadBurst,
+        Code::UnknownEvent,
+        Code::UnknownField,
+        Code::NoEdges,
+        Code::BadParam,
+        Code::InvertedBand,
+        Code::DuplicateAssignment,
+        Code::DownServerAssignment,
+        Code::GammaOverflow,
+        Code::FileUnreadable,
+        Code::ParseError,
+        Code::DemandExceedsCapacity,
+        Code::ZeroGamma,
+        Code::DeadlineInfeasible,
+        Code::EventBeyondHorizon,
+        Code::PermanentOutage,
+        Code::EmptyScript,
+    ];
+
+    /// The stable machine code (`E001`, `W101`, `I201`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Code::ServerIndex => "E001",
+            Code::EdgeIndex => "E002",
+            Code::ServiceIndex => "E003",
+            Code::TierIndex => "E004",
+            Code::EventTime => "E005",
+            Code::DownWhileDown => "E006",
+            Code::UpWhileUp => "E007",
+            Code::LinkPair => "E008",
+            Code::Mobility => "E009",
+            Code::LoadBurst => "E010",
+            Code::UnknownEvent => "E011",
+            Code::UnknownField => "E012",
+            Code::NoEdges => "E013",
+            Code::BadParam => "E014",
+            Code::InvertedBand => "E015",
+            Code::DuplicateAssignment => "E016",
+            Code::DownServerAssignment => "E017",
+            Code::GammaOverflow => "E018",
+            Code::FileUnreadable => "E019",
+            Code::ParseError => "E020",
+            Code::DemandExceedsCapacity => "W101",
+            Code::ZeroGamma => "W102",
+            Code::DeadlineInfeasible => "W103",
+            Code::EventBeyondHorizon => "W104",
+            Code::PermanentOutage => "W105",
+            Code::EmptyScript => "I201",
+        }
+    }
+
+    /// Severity is fixed per code, not per occurrence.
+    pub fn severity(&self) -> Severity {
+        match self.as_str().as_bytes()[0] {
+            b'E' => Severity::Error,
+            b'W' => Severity::Warning,
+            _ => Severity::Info,
+        }
+    }
+}
+
+/// One finding: a code, a location path into the document (e.g.
+/// `events[3]`, `catalog`, `assignments[0]`), and a human message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub at: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// The canonical one-line rendering:
+    /// `error[E001] events[3]: server 12 out of range (10 servers)`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}[{}] {}: {}",
+            self.code.severity().as_str(),
+            self.code.as_str(),
+            self.at,
+            self.message
+        )
+    }
+}
+
+/// An accumulating, sortable diagnostic list.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Diagnostics {
+    items: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    pub fn push(&mut self, code: Code, at: impl AsRef<str>, message: impl Into<String>) {
+        self.items
+            .push(Diagnostic { code, at: at.as_ref().to_string(), message: message.into() });
+    }
+
+    pub fn extend(&mut self, other: Diagnostics) {
+        self.items.extend(other.items);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.count(Severity::Error) > 0
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.items.iter().filter(|d| d.code.severity() == sev).count()
+    }
+
+    /// Sorted view: severity, then code, then location, then message —
+    /// a total deterministic order, so rendering is byte-stable.
+    pub fn sorted(&self) -> Vec<&Diagnostic> {
+        let mut v: Vec<&Diagnostic> = self.items.iter().collect();
+        v.sort_by(|a, b| {
+            (a.code.severity(), a.code.as_str(), &a.at, &a.message).cmp(&(
+                b.code.severity(),
+                b.code.as_str(),
+                &b.at,
+                &b.message,
+            ))
+        });
+        v
+    }
+
+    /// Does any diagnostic carry `code`? (Fixture tests key off this.)
+    pub fn has_code(&self, code: Code) -> bool {
+        self.items.iter().any(|d| d.code == code)
+    }
+
+    /// One line per diagnostic, sorted; empty string when clean.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in self.sorted() {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Byte-stable JSON (sorted diagnostics, `Json::obj` key order).
+    pub fn to_json(&self) -> Json {
+        let diags = self.sorted().into_iter().map(|d| {
+            Json::obj(vec![
+                ("at", Json::str(&d.at)),
+                ("code", Json::str(d.code.as_str())),
+                ("message", Json::str(&d.message)),
+                ("severity", Json::str(d.code.severity().as_str())),
+            ])
+        });
+        Json::obj(vec![
+            ("diagnostics", Json::arr(diags)),
+            (
+                "summary",
+                Json::obj(vec![
+                    ("errors", Json::num(self.count(Severity::Error) as f64)),
+                    ("infos", Json::num(self.count(Severity::Info) as f64)),
+                    ("warnings", Json::num(self.count(Severity::Warning) as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_severity_consistent() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in Code::ALL {
+            assert!(seen.insert(c.as_str()), "duplicate code {}", c.as_str());
+            let sev = c.severity();
+            match c.as_str().as_bytes()[0] {
+                b'E' => assert_eq!(sev, Severity::Error),
+                b'W' => assert_eq!(sev, Severity::Warning),
+                b'I' => assert_eq!(sev, Severity::Info),
+                _ => panic!("bad code prefix {}", c.as_str()),
+            }
+        }
+        assert_eq!(seen.len(), Code::ALL.len());
+    }
+
+    #[test]
+    fn rendering_is_sorted_and_stable() {
+        let mut d = Diagnostics::new();
+        d.push(Code::ZeroGamma, "gamma[1]", "zero");
+        d.push(Code::ServerIndex, "events[2]", "b");
+        d.push(Code::ServerIndex, "events[1]", "a");
+        let text = d.render_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("error[E001] events[1]"));
+        assert!(lines[1].starts_with("error[E001] events[2]"));
+        assert!(lines[2].starts_with("warning[W102]"));
+        // Rendering twice is byte-identical.
+        assert_eq!(text, d.render_text());
+        assert_eq!(d.to_json().dump(), d.to_json().dump());
+    }
+
+    #[test]
+    fn counts_by_severity() {
+        let mut d = Diagnostics::new();
+        d.push(Code::ServerIndex, "x", "m");
+        d.push(Code::DemandExceedsCapacity, "y", "m");
+        d.push(Code::EmptyScript, "z", "m");
+        assert!(d.has_errors());
+        assert_eq!(d.count(Severity::Error), 1);
+        assert_eq!(d.count(Severity::Warning), 1);
+        assert_eq!(d.count(Severity::Info), 1);
+        assert!(d.has_code(Code::EmptyScript));
+        assert!(!d.has_code(Code::TierIndex));
+    }
+}

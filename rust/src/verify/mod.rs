@@ -1,0 +1,293 @@
+//! `edgeus verify` — the pure, run-nothing static checker over worlds,
+//! scenario scripts, and serialized schedules (DESIGN.md
+//! §Static-Analysis).
+//!
+//! Every check emits structured [`Diagnostic`]s with stable codes
+//! (`E001`…, `W101`…, `I201`…) instead of bailing on the first problem,
+//! so one pass reports everything wrong with an input. The same checks
+//! run automatically at the top of `edgeus des`, `edgeus scenario`, and
+//! `edgeus serve`, so every entry point fails fast with identical
+//! diagnostics before any simulation state is built.
+//!
+//! Document kinds are sniffed from the top-level keys:
+//! `events[]` → script, `assignments[]` → schedule, anything else →
+//! world (the `config::scenario_from_json` format).
+
+pub mod diag;
+pub mod schedule;
+pub mod script;
+pub mod world;
+
+pub use diag::{Code, Diagnostic, Diagnostics, Severity};
+pub use schedule::verify_schedule_doc;
+pub use script::{verify_script, verify_script_doc};
+pub use world::{verify_scenario, DesLoad};
+
+use crate::serving::ServingConfig;
+use crate::sim::DesConfig;
+use crate::util::json::Json;
+use crate::workload::ScenarioParams;
+
+/// The world dimensions a script is checked against.
+#[derive(Clone, Copy, Debug)]
+pub struct WorldShape {
+    pub num_servers: usize,
+    pub num_edges: usize,
+    pub num_services: usize,
+    pub num_tiers: usize,
+}
+
+impl WorldShape {
+    pub fn of(s: &ScenarioParams) -> WorldShape {
+        WorldShape {
+            num_servers: s.topology.num_edge + s.topology.num_cloud,
+            num_edges: s.topology.num_edge,
+            num_services: s.catalog.num_services,
+            num_tiers: s.catalog.num_tiers,
+        }
+    }
+}
+
+/// What a JSON document claims to be.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DocKind {
+    World,
+    Script,
+    Schedule,
+}
+
+impl DocKind {
+    pub fn parse(s: &str) -> Option<DocKind> {
+        match s {
+            "world" => Some(DocKind::World),
+            "script" => Some(DocKind::Script),
+            "schedule" => Some(DocKind::Schedule),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DocKind::World => "world",
+            DocKind::Script => "script",
+            DocKind::Schedule => "schedule",
+        }
+    }
+}
+
+/// Sniff the document kind from its top-level keys.
+pub fn sniff_kind(j: &Json) -> DocKind {
+    if !j.get("events").is_null() {
+        DocKind::Script
+    } else if !j.get("assignments").is_null() {
+        DocKind::Schedule
+    } else {
+        DocKind::World
+    }
+}
+
+/// Options for file-level verification (CLI flags / caller context).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifyOptions {
+    /// Force the document kind instead of sniffing.
+    pub kind: Option<DocKind>,
+    /// Run horizon, for the beyond-horizon and load screens.
+    pub horizon_ms: Option<f64>,
+    /// Offered arrival rate (req/s), for the capacity screen.
+    pub arrival_rate_per_s: Option<f64>,
+    /// Script world shape override (defaults to the paper world, or the
+    /// world embedded in the document for world docs).
+    pub shape: Option<WorldShape>,
+}
+
+/// Verify one parsed document.
+pub fn verify_document(j: &Json, opts: &VerifyOptions) -> Diagnostics {
+    let kind = opts.kind.unwrap_or_else(|| sniff_kind(j));
+    match kind {
+        DocKind::Script => {
+            let shape = opts.shape.unwrap_or_else(|| WorldShape::of(&ScenarioParams::default()));
+            verify_script_doc(j, &shape, opts.horizon_ms)
+        }
+        DocKind::Schedule => verify_schedule_doc(j),
+        DocKind::World => {
+            let scenario = crate::config::scenario_from_json(j);
+            // A world file may embed its offered load under "des"; CLI
+            // flags take precedence over the embedded values.
+            let des = j.get("des");
+            let defaults = DesConfig::default();
+            let rate = opts
+                .arrival_rate_per_s
+                .or_else(|| des.get("arrival_rate_per_s").as_f64());
+            let load = rate.map(|r| DesLoad {
+                arrival_rate_per_s: r,
+                frame_ms: des.get("frame_ms").as_f64().unwrap_or(defaults.frame_ms),
+                horizon_ms: opts
+                    .horizon_ms
+                    .or_else(|| des.get("horizon_ms").as_f64())
+                    .unwrap_or(defaults.horizon_ms),
+            });
+            verify_scenario(&scenario, load.as_ref())
+        }
+    }
+}
+
+/// Verify a document file on disk: unreadable files and malformed JSON
+/// become diagnostics (`E019`/`E020`), never panics or bare errors.
+pub fn verify_file(path: &str, opts: &VerifyOptions) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            out.push(Code::FileUnreadable, path, format!("{e}"));
+            return out;
+        }
+    };
+    let j = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            out.push(Code::ParseError, path, format!("{e}"));
+            return out;
+        }
+    };
+    verify_document(&j, opts)
+}
+
+/// The auto-check at the top of `edgeus des` and `edgeus scenario`:
+/// world parameters plus the attached script (if any) against the
+/// configured load, all as one diagnostic list.
+pub fn verify_des_config(cfg: &DesConfig, rates_per_s: &[f64]) -> Diagnostics {
+    let max_rate = rates_per_s.iter().cloned().fold(cfg.arrival_rate_per_s, f64::max);
+    let load = DesLoad {
+        arrival_rate_per_s: max_rate,
+        frame_ms: cfg.frame_ms,
+        horizon_ms: cfg.horizon_ms,
+    };
+    let mut out = verify_scenario(&cfg.scenario, Some(&load));
+    if let Some(script) = &cfg.script {
+        out.extend(verify_script(script, &WorldShape::of(&cfg.scenario), Some(cfg.horizon_ms)));
+    }
+    out
+}
+
+/// The auto-check at the top of `edgeus serve`: the testbed analogue of
+/// the world checks (the serving config carries its world inline).
+pub fn verify_serving_config(cfg: &ServingConfig) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    if cfg.num_edge == 0 {
+        out.push(Code::NoEdges, "serving", "no edge servers configured — users cannot be covered");
+    }
+    for (name, v) in [
+        ("total_requests", cfg.total_requests as f64),
+        ("window_ms", cfg.window_ms),
+        ("frame_ms", cfg.frame_ms),
+        ("queue_capacity", cfg.queue_capacity as f64),
+        ("time_scale", cfg.time_scale),
+        ("deadline_ms", cfg.deadline_ms),
+        ("edge_proc_base_ms", cfg.edge_proc_base_ms),
+        ("cloud_proc_base_ms", cfg.cloud_proc_base_ms),
+        ("tier_slowdown", cfg.tier_slowdown),
+    ] {
+        if !v.is_finite() || v <= 0.0 {
+            out.push(Code::BadParam, "serving", format!("{name} must be finite and > 0 (got {v})"));
+        }
+    }
+    if !(0.0..=100.0).contains(&cfg.min_accuracy_pct) {
+        out.push(
+            Code::BadParam,
+            "serving",
+            format!("min_accuracy_pct {} must be in [0, 100]", cfg.min_accuracy_pct),
+        );
+    }
+    if cfg.gamma_edge == 0 {
+        out.push(
+            Code::ZeroGamma,
+            "serving",
+            "gamma_edge = 0: edges have no executor workers — every local candidate is infeasible",
+        );
+    }
+    if out.has_errors() {
+        return out;
+    }
+    let fastest = cfg.edge_proc_base_ms.min(cfg.cloud_proc_base_ms);
+    if cfg.deadline_ms < fastest {
+        out.push(
+            Code::DeadlineInfeasible,
+            "serving",
+            format!(
+                "deadline {} ms is below the fastest tier's processing time {} ms — no request can be satisfied",
+                cfg.deadline_ms, fastest
+            ),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sniffing_matches_document_shape() {
+        let w = Json::parse(r#"{"topology":{"num_edge":3}}"#).unwrap();
+        let s = Json::parse(r#"{"name":"x","events":[]}"#).unwrap();
+        let c = Json::parse(r#"{"gamma":[1],"assignments":[]}"#).unwrap();
+        assert_eq!(sniff_kind(&w), DocKind::World);
+        assert_eq!(sniff_kind(&s), DocKind::Script);
+        assert_eq!(sniff_kind(&c), DocKind::Schedule);
+    }
+
+    #[test]
+    fn default_des_config_is_clean() {
+        let d = verify_des_config(&DesConfig::default(), &[]);
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn des_config_with_builtin_scripts_is_clean() {
+        use crate::scenario::Script;
+        for name in Script::builtin_names() {
+            let defaults = DesConfig::default();
+            let cfg = DesConfig {
+                script: Script::builtin(name, defaults.horizon_ms, defaults.scenario.topology.num_edge),
+                ..defaults
+            };
+            let d = verify_des_config(&cfg, &[]);
+            assert!(d.is_empty(), "{name}:\n{}", d.render_text());
+        }
+    }
+
+    #[test]
+    fn default_serving_config_is_clean() {
+        let d = verify_serving_config(&ServingConfig::default());
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn serving_config_catches_bad_qos() {
+        let cfg = ServingConfig { min_accuracy_pct: 130.0, ..ServingConfig::default() };
+        assert!(verify_serving_config(&cfg).has_code(Code::BadParam));
+        let cfg = ServingConfig { deadline_ms: 10.0, ..ServingConfig::default() };
+        assert!(verify_serving_config(&cfg).has_code(Code::DeadlineInfeasible));
+    }
+
+    #[test]
+    fn missing_file_and_bad_json_become_diagnostics() {
+        let opts = VerifyOptions::default();
+        let d = verify_file("/nonexistent/edgeus-no-such.json", &opts);
+        assert!(d.has_code(Code::FileUnreadable));
+        let dir = std::env::temp_dir().join("edgeus_verify_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, "{nope").unwrap();
+        let d = verify_file(p.to_str().unwrap(), &opts);
+        assert!(d.has_code(Code::ParseError));
+    }
+
+    #[test]
+    fn world_doc_embedded_load_drives_capacity_screen() {
+        let j = Json::parse(r#"{"des":{"arrival_rate_per_s":500,"frame_ms":3000,"horizon_ms":60000}}"#)
+            .unwrap();
+        let d = verify_document(&j, &VerifyOptions::default());
+        assert!(d.has_code(Code::DemandExceedsCapacity), "{}", d.render_text());
+    }
+}

@@ -1,0 +1,196 @@
+//! Schedule-level lint over *serialized* schedules: a JSON document
+//! describing per-server capacities and a list of request→(server,
+//! service, tier) assignments, checked without constructing a problem
+//! instance. (In-process schedules are checked by
+//! `coordinator::us::validate_schedule` against a live instance; this
+//! is the offline analogue for schedules exchanged as files.)
+//!
+//! Document format:
+//!
+//! ```json
+//! {
+//!   "gamma": [2, 3, 4, 24],
+//!   "down": [1],
+//!   "num_services": 100,
+//!   "num_tiers": 10,
+//!   "assignments": [
+//!     {"request": 0, "server": 0, "service": 5, "tier": 2, "comp_cost": 1.0}
+//!   ]
+//! }
+//! ```
+//!
+//! `down`, `num_services`, `num_tiers`, and `comp_cost` (default 1.0)
+//! are optional; `gamma` and `assignments` are required.
+
+use crate::util::json::Json;
+use crate::verify::diag::{Code, Diagnostics};
+
+pub fn verify_schedule_doc(j: &Json) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    let Some(gamma) = j.get("gamma").as_arr() else {
+        out.push(Code::ParseError, "gamma", "schedule needs a gamma[] capacity array (one entry per server)");
+        return out;
+    };
+    let Some(assignments) = j.get("assignments").as_arr() else {
+        out.push(Code::ParseError, "assignments", "schedule needs an assignments[] array");
+        return out;
+    };
+    let num_servers = gamma.len();
+    let gamma: Vec<f64> = gamma.iter().map(|g| g.as_f64().unwrap_or(f64::NAN)).collect();
+    for (jx, g) in gamma.iter().enumerate() {
+        if !g.is_finite() || *g < 0.0 {
+            out.push(Code::BadParam, format!("gamma[{jx}]"), format!("capacity must be finite and >= 0 (got {g})"));
+        }
+    }
+    let mut down = vec![false; num_servers];
+    if let Some(d) = j.get("down").as_arr() {
+        for (i, idx) in d.iter().enumerate() {
+            match idx.as_usize() {
+                Some(s) if s < num_servers => down[s] = true,
+                Some(s) => out.push(
+                    Code::ServerIndex,
+                    format!("down[{i}]"),
+                    format!("server {s} out of range ({num_servers} servers)"),
+                ),
+                None => out.push(Code::ParseError, format!("down[{i}]"), "down entries must be server indices"),
+            }
+        }
+    }
+    for (jx, (g, d)) in gamma.iter().zip(down.iter()).enumerate() {
+        if *g == 0.0 && !d {
+            out.push(
+                Code::ZeroGamma,
+                format!("gamma[{jx}]"),
+                format!("server {jx} is up with zero γ — placements there can never serve"),
+            );
+        }
+    }
+    let num_services = j.get("num_services").as_usize();
+    let num_tiers = j.get("num_tiers").as_usize();
+
+    let mut assigned: Vec<Option<usize>> = Vec::new(); // request -> first assignment index
+    let mut used = vec![0.0f64; num_servers];
+    for (i, a) in assignments.iter().enumerate() {
+        let at = format!("assignments[{i}]");
+        let Some(request) = a.get("request").as_usize() else {
+            out.push(Code::ParseError, &at, "assignment needs a \"request\" index");
+            continue;
+        };
+        if assigned.len() <= request {
+            assigned.resize(request + 1, None);
+        }
+        match assigned[request] {
+            Some(first) => {
+                out.push(
+                    Code::DuplicateAssignment,
+                    &at,
+                    format!("request {request} already assigned at assignments[{first}]"),
+                );
+                continue;
+            }
+            None => assigned[request] = Some(i),
+        }
+        let Some(server) = a.get("server").as_usize() else {
+            out.push(Code::ParseError, &at, "assignment needs a \"server\" index");
+            continue;
+        };
+        if server >= num_servers {
+            out.push(Code::ServerIndex, &at, format!("server {server} out of range ({num_servers} servers)"));
+            continue;
+        }
+        if down[server] {
+            out.push(Code::DownServerAssignment, &at, format!("request {request} assigned to down server {server}"));
+        }
+        if let (Some(ns), Some(k)) = (num_services, a.get("service").as_usize()) {
+            if k >= ns {
+                out.push(Code::ServiceIndex, &at, format!("service {k} not in the catalog ({ns} services)"));
+            }
+        }
+        if let (Some(nt), Some(l)) = (num_tiers, a.get("tier").as_usize()) {
+            if l >= nt {
+                out.push(Code::TierIndex, &at, format!("tier {l} not in the catalog ({nt} tiers)"));
+            }
+        }
+        used[server] += a.get("comp_cost").as_f64().unwrap_or(1.0);
+    }
+    for (jx, (u, g)) in used.iter().zip(gamma.iter()).enumerate() {
+        if g.is_finite() && *u > g + 1e-9 {
+            out.push(
+                Code::GammaOverflow,
+                format!("gamma[{jx}]"),
+                format!("server {jx}: assigned computation cost {u:.3} exceeds γ = {g:.3}"),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Diagnostics {
+        verify_schedule_doc(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn clean_schedule_passes() {
+        let d = doc(
+            r#"{"gamma":[2,3],"num_services":4,"num_tiers":3,"assignments":[
+                {"request":0,"server":0,"service":1,"tier":2},
+                {"request":1,"server":1,"service":0,"tier":0,"comp_cost":1.5}
+            ]}"#,
+        );
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn duplicate_assignment_flagged() {
+        let d = doc(
+            r#"{"gamma":[2],"assignments":[
+                {"request":0,"server":0},{"request":0,"server":0}
+            ]}"#,
+        );
+        assert!(d.has_code(Code::DuplicateAssignment));
+    }
+
+    #[test]
+    fn down_server_and_overflow_flagged() {
+        let d = doc(
+            r#"{"gamma":[1,2],"down":[1],"assignments":[
+                {"request":0,"server":1},
+                {"request":1,"server":0},{"request":2,"server":0}
+            ]}"#,
+        );
+        assert!(d.has_code(Code::DownServerAssignment));
+        assert!(d.has_code(Code::GammaOverflow), "{}", d.render_text());
+    }
+
+    #[test]
+    fn zero_gamma_up_server_warns() {
+        let d = doc(r#"{"gamma":[0,2],"assignments":[]}"#);
+        assert!(d.has_code(Code::ZeroGamma));
+        assert!(!d.has_errors());
+        // A *down* zero-γ server is fine — the outage explains it.
+        let d = doc(r#"{"gamma":[0,2],"down":[0],"assignments":[]}"#);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn missing_gamma_is_a_parse_error() {
+        assert!(doc(r#"{"assignments":[]}"#).has_code(Code::ParseError));
+    }
+
+    #[test]
+    fn out_of_range_indices_flagged() {
+        let d = doc(
+            r#"{"gamma":[2],"num_services":3,"num_tiers":2,"assignments":[
+                {"request":0,"server":5},
+                {"request":1,"server":0,"service":9,"tier":7}
+            ]}"#,
+        );
+        assert!(d.has_code(Code::ServerIndex));
+        assert!(d.has_code(Code::ServiceIndex));
+        assert!(d.has_code(Code::TierIndex));
+    }
+}

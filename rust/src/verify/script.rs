@@ -1,0 +1,253 @@
+//! Static checks over scenario scripts: index bounds, event-time
+//! sanity, and the stateful overlap rules (`server_down`/`server_up`
+//! pairing) that `Script::validate` cannot see because they span
+//! events. Pure — nothing here runs a simulation.
+
+use crate::scenario::script::{allowed_event_fields, EventKind, LinkClass, Script, EVENT_TYPES};
+use crate::util::json::Json;
+use crate::verify::diag::{Code, Diagnostics};
+use crate::verify::WorldShape;
+
+/// Verify a parsed script against a world shape. `horizon_ms` (when
+/// known, e.g. from `--horizon-s`) enables the beyond-horizon check.
+pub fn verify_script(script: &Script, shape: &WorldShape, horizon_ms: Option<f64>) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    if script.is_empty() {
+        out.push(Code::EmptyScript, "events", "script contains no events");
+        return out;
+    }
+    let ns = shape.num_servers;
+    let ne = shape.num_edges;
+    // Track which servers the script has taken down so far; events are
+    // time-sorted by construction, so a linear walk sees them in the
+    // order the engine will apply them.
+    let mut down = vec![false; ns];
+    for (i, ev) in script.events.iter().enumerate() {
+        let at = format!("events[{i}]");
+        if !ev.at_ms.is_finite() || ev.at_ms < 0.0 {
+            out.push(Code::EventTime, &at, format!("non-finite or negative trigger time {}", ev.at_ms));
+        } else if let Some(h) = horizon_ms {
+            if ev.at_ms >= h {
+                out.push(
+                    Code::EventBeyondHorizon,
+                    &at,
+                    format!("trigger time {} ms is at or beyond the {h} ms horizon — the event never fires", ev.at_ms),
+                );
+            }
+        }
+        match &ev.kind {
+            EventKind::LoadBurst { rate_multiplier, duration_ms } => {
+                if !rate_multiplier.is_finite() || *rate_multiplier <= 0.0 {
+                    out.push(Code::LoadBurst, &at, format!("rate multiplier {rate_multiplier} must be finite and > 0"));
+                }
+                if !duration_ms.is_finite() || *duration_ms < 0.0 {
+                    out.push(Code::LoadBurst, &at, format!("duration {duration_ms} ms must be finite and >= 0"));
+                }
+            }
+            EventKind::ServerDown { server } => {
+                if *server >= ns {
+                    out.push(Code::ServerIndex, &at, format!("server {server} out of range ({ns} servers)"));
+                } else if down[*server] {
+                    out.push(Code::DownWhileDown, &at, format!("server {server} is already down here"));
+                } else {
+                    down[*server] = true;
+                }
+            }
+            EventKind::ServerUp { server } => {
+                if *server >= ns {
+                    out.push(Code::ServerIndex, &at, format!("server {server} out of range ({ns} servers)"));
+                } else if !down[*server] {
+                    out.push(Code::UpWhileUp, &at, format!("server {server} is not down here — unmatched server_up"));
+                } else {
+                    down[*server] = false;
+                }
+            }
+            EventKind::BandwidthDrift { link, factor } => {
+                if !factor.is_finite() || *factor <= 0.0 {
+                    out.push(Code::BadParam, &at, format!("bandwidth drift factor {factor} must be finite and > 0"));
+                }
+                if let LinkClass::Pair { a, b } = link {
+                    if *a >= ns || *b >= ns {
+                        out.push(Code::LinkPair, &at, format!("link pair ({a}, {b}) out of range ({ns} servers)"));
+                    } else if a == b {
+                        out.push(Code::LinkPair, &at, format!("link pair ({a}, {b}) is a self link"));
+                    }
+                }
+            }
+            EventKind::UserMobility { from_edge, to_edge, fraction } => {
+                if *from_edge >= ne || *to_edge >= ne {
+                    out.push(
+                        Code::EdgeIndex,
+                        &at,
+                        format!("mobility edge {} out of range ({ne} edges)", (*from_edge).max(*to_edge)),
+                    );
+                } else if from_edge == to_edge {
+                    out.push(Code::Mobility, &at, format!("from_edge == to_edge ({from_edge})"));
+                }
+                if !(0.0..=1.0).contains(fraction) {
+                    out.push(Code::Mobility, &at, format!("fraction {fraction} not in [0, 1]"));
+                }
+            }
+            EventKind::PlacementChange { server, service, tier, .. } => {
+                if *server >= ns {
+                    out.push(Code::ServerIndex, &at, format!("server {server} out of range ({ns} servers)"));
+                }
+                if *service >= shape.num_services {
+                    out.push(
+                        Code::ServiceIndex,
+                        &at,
+                        format!("service {service} not in the catalog ({} services)", shape.num_services),
+                    );
+                }
+                if *tier >= shape.num_tiers {
+                    out.push(Code::TierIndex, &at, format!("tier {tier} not in the catalog ({} tiers)", shape.num_tiers));
+                }
+            }
+        }
+    }
+    for (server, is_down) in down.iter().enumerate() {
+        if *is_down {
+            out.push(
+                Code::PermanentOutage,
+                "events",
+                format!("server {server} goes down and never comes back (no matching server_up)"),
+            );
+        }
+    }
+    out
+}
+
+/// Verify a script *document* (already-parsed JSON). Structural issues
+/// the strict parser would reject (unknown type/field, missing keys)
+/// become diagnostics here instead of hard errors, so `edgeus verify`
+/// reports everything it can in one pass.
+pub fn verify_script_doc(j: &Json, shape: &WorldShape, horizon_ms: Option<f64>) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    let Some(events) = j.get("events").as_arr() else {
+        out.push(Code::ParseError, "events", "script has no events[] array");
+        return out;
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let at = format!("events[{i}]");
+        let Some(ty) = ev.get("type").as_str() else {
+            out.push(Code::ParseError, &at, "event has no \"type\" string");
+            continue;
+        };
+        let Some(allowed) = allowed_event_fields(ty) else {
+            out.push(
+                Code::UnknownEvent,
+                &at,
+                format!("unknown event type {ty:?} (expected one of {})", EVENT_TYPES.join(", ")),
+            );
+            continue;
+        };
+        if let Some(obj) = ev.as_obj() {
+            for key in obj.keys() {
+                if !allowed.contains(&key.as_str()) {
+                    out.push(
+                        Code::UnknownField,
+                        &at,
+                        format!("unknown field {key:?} for {ty} (allowed: {})", allowed.join(", ")),
+                    );
+                }
+            }
+        }
+    }
+    if out.has_errors() {
+        return out;
+    }
+    match Script::from_json(j) {
+        Ok(script) => out.extend(verify_script(&script, shape, horizon_ms)),
+        Err(e) => out.push(Code::ParseError, "events", format!("{e:#}")),
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::script::ScriptedEvent;
+
+    fn shape() -> WorldShape {
+        WorldShape { num_servers: 4, num_edges: 3, num_services: 10, num_tiers: 4 }
+    }
+
+    fn ev(at_ms: f64, kind: EventKind) -> ScriptedEvent {
+        ScriptedEvent { at_ms, kind }
+    }
+
+    #[test]
+    fn builtin_scripts_are_clean() {
+        for name in Script::builtin_names() {
+            let s = Script::builtin(name, 120_000.0, 9).unwrap();
+            let d = verify_script(
+                &s,
+                &WorldShape { num_servers: 10, num_edges: 9, num_services: 100, num_tiers: 10 },
+                Some(120_000.0),
+            );
+            assert!(d.is_empty(), "{name}:\n{}", d.render_text());
+        }
+    }
+
+    #[test]
+    fn down_down_and_unmatched_up_are_flagged() {
+        let s = Script::new(
+            "x",
+            vec![
+                ev(1000.0, EventKind::ServerDown { server: 1 }),
+                ev(2000.0, EventKind::ServerDown { server: 1 }),
+                ev(3000.0, EventKind::ServerUp { server: 2 }),
+            ],
+        );
+        let d = verify_script(&s, &shape(), None);
+        assert!(d.has_code(Code::DownWhileDown));
+        assert!(d.has_code(Code::UpWhileUp));
+        assert!(d.has_code(Code::PermanentOutage));
+    }
+
+    #[test]
+    fn matched_outage_is_clean() {
+        let s = Script::new(
+            "x",
+            vec![
+                ev(1000.0, EventKind::ServerDown { server: 1 }),
+                ev(2000.0, EventKind::ServerUp { server: 1 }),
+            ],
+        );
+        assert!(verify_script(&s, &shape(), Some(10_000.0)).is_empty());
+    }
+
+    #[test]
+    fn beyond_horizon_is_a_warning_only() {
+        let s = Script::new(
+            "x",
+            vec![ev(50_000.0, EventKind::LoadBurst { rate_multiplier: 2.0, duration_ms: 100.0 })],
+        );
+        let d = verify_script(&s, &shape(), Some(10_000.0));
+        assert!(d.has_code(Code::EventBeyondHorizon));
+        assert!(!d.has_errors());
+        // Without a horizon the check cannot fire.
+        assert!(verify_script(&s, &shape(), None).is_empty());
+    }
+
+    #[test]
+    fn doc_level_unknowns_become_diagnostics() {
+        let j = Json::parse(
+            r#"{"name":"x","events":[
+                {"at_ms":0,"type":"sever_down","server":1},
+                {"at_ms":0,"type":"load_burst","rate_multiplier":2,"duration_ms":5,"extra":1}
+            ]}"#,
+        )
+        .unwrap();
+        let d = verify_script_doc(&j, &shape(), None);
+        assert!(d.has_code(Code::UnknownEvent));
+        assert!(d.has_code(Code::UnknownField));
+    }
+
+    #[test]
+    fn empty_script_is_info() {
+        let d = verify_script(&Script::new("x", vec![]), &shape(), None);
+        assert!(d.has_code(Code::EmptyScript));
+        assert!(!d.has_errors());
+    }
+}

@@ -1,0 +1,231 @@
+//! Static checks over world configurations (`config::scenario_from_json`
+//! documents the format): structural sanity of topology/catalog/workload
+//! parameters, aggregate capacity vs offered demand, and the deadline
+//! feasibility pre-screen. Pure — builds no topology larger than the
+//! parameter structs themselves.
+
+use crate::model::service::CatalogParams;
+use crate::model::topology::TopologyParams;
+use crate::verify::diag::{Code, Diagnostics};
+use crate::workload::ScenarioParams;
+
+/// The offered-load context of a DES/scenario run, when known. Without
+/// it the capacity and horizon checks cannot fire (a bare world file
+/// has no load attached).
+#[derive(Clone, Copy, Debug)]
+pub struct DesLoad {
+    pub arrival_rate_per_s: f64,
+    pub frame_ms: f64,
+    pub horizon_ms: f64,
+}
+
+/// Summed default edge γ for the paper topology: `paper_default` cycles
+/// edge classes Small/Medium/Large (γ 2/3/4) by index.
+fn paper_edge_gamma_sum(t: &TopologyParams) -> f64 {
+    use crate::model::server::ServerClass;
+    let edge_classes =
+        [ServerClass::EdgeSmall, ServerClass::EdgeMedium, ServerClass::EdgeLarge];
+    (0..t.num_edge).map(|i| edge_classes[i % 3].default_gamma()).sum()
+}
+
+/// The fastest completion any request could see: the optimistic bound
+/// over local processing on the fastest edge class (speed 0.85) and the
+/// fastest cloud path (speed 0.9 plus the minimum backhaul delay).
+/// Mirrors the constants in `ServiceCatalog::synthetic`.
+fn fastest_completion_ms(t: &TopologyParams, c: &CatalogParams) -> f64 {
+    let edge_best = c.edge_proc_lo_ms * 0.85;
+    let cloud_best = c.cloud_proc_ms * 0.9 + t.edge_cloud_ms * (1.0 - t.jitter).max(0.0);
+    edge_best.min(cloud_best)
+}
+
+/// Mean per-request edge processing time: band midpoint scaled by the
+/// average tier slowdown (tiers are drawn uniformly in expectation).
+fn mean_edge_proc_ms(c: &CatalogParams) -> f64 {
+    let mid = 0.5 * (c.edge_proc_lo_ms + c.edge_proc_hi_ms);
+    let mean_slow = (0..c.num_tiers)
+        .map(|l| c.tier_slowdown.powi(l as i32))
+        .sum::<f64>()
+        / c.num_tiers.max(1) as f64;
+    mid * mean_slow
+}
+
+fn check_positive(out: &mut Diagnostics, at: &str, name: &str, v: f64) {
+    if !v.is_finite() || v <= 0.0 {
+        out.push(Code::BadParam, at, format!("{name} must be finite and > 0 (got {v})"));
+    }
+}
+
+fn check_band(out: &mut Diagnostics, at: &str, name: &str, lo: f64, hi: f64) {
+    if lo > hi {
+        out.push(Code::InvertedBand, at, format!("{name} band inverted: lo {lo} > hi {hi}"));
+    }
+}
+
+/// Verify a world (topology + catalog + workload parameters), plus the
+/// demand/deadline screens when the offered load is known.
+pub fn verify_scenario(s: &ScenarioParams, load: Option<&DesLoad>) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    let t = &s.topology;
+    let c = &s.catalog;
+    let w = &s.workload;
+
+    // -- topology ---------------------------------------------------------
+    if t.num_edge == 0 {
+        out.push(
+            Code::NoEdges,
+            "topology",
+            "world has no edge servers — users cannot be covered (the cloud is unreachable directly)",
+        );
+    }
+    if t.edge_edge_ms < 0.0 || t.edge_cloud_ms < 0.0 {
+        out.push(Code::BadParam, "topology", "link delays must be >= 0");
+    }
+    if !(0.0..1.0).contains(&t.jitter) {
+        out.push(Code::BadParam, "topology", format!("jitter {} must be in [0, 1)", t.jitter));
+    }
+
+    // -- catalog ----------------------------------------------------------
+    if c.num_services == 0 {
+        out.push(Code::BadParam, "catalog", "num_services must be > 0");
+    }
+    if c.num_tiers == 0 {
+        out.push(Code::BadParam, "catalog", "num_tiers must be > 0");
+    }
+    check_positive(&mut out, "catalog", "edge_proc_lo_ms", c.edge_proc_lo_ms);
+    check_positive(&mut out, "catalog", "cloud_proc_ms", c.cloud_proc_ms);
+    check_positive(&mut out, "catalog", "tier_slowdown", c.tier_slowdown);
+    check_band(&mut out, "catalog", "edge_proc_ms", c.edge_proc_lo_ms, c.edge_proc_hi_ms);
+    check_band(&mut out, "catalog", "accuracy_pct", c.accuracy_lo_pct, c.accuracy_hi_pct);
+    if c.accuracy_lo_pct < 0.0 || c.accuracy_hi_pct > 100.0 {
+        out.push(
+            Code::BadParam,
+            "catalog",
+            format!(
+                "accuracy band [{}, {}] must lie in [0, 100]",
+                c.accuracy_lo_pct, c.accuracy_hi_pct
+            ),
+        );
+    }
+
+    // -- workload ---------------------------------------------------------
+    check_positive(&mut out, "workload", "deadline_mean_ms", w.deadline_mean_ms);
+    check_positive(&mut out, "workload", "max_completion_ms", w.max_completion_ms);
+    check_band(&mut out, "workload", "payload_bytes", w.payload_lo_bytes as f64, w.payload_hi_bytes as f64);
+    if w.w_accuracy < 0.0 || w.w_completion < 0.0 {
+        out.push(Code::BadParam, "workload", "objective weights must be >= 0");
+    }
+
+    // The screens below need structurally valid inputs.
+    if out.has_errors() {
+        return out;
+    }
+
+    // -- deadline feasibility pre-screen ----------------------------------
+    let fastest = fastest_completion_ms(t, c);
+    if w.deadline_mean_ms < fastest {
+        out.push(
+            Code::DeadlineInfeasible,
+            "workload",
+            format!(
+                "mean deadline {} ms is below the fastest possible completion {:.0} ms on any reachable server — most requests can never be satisfied",
+                w.deadline_mean_ms, fastest
+            ),
+        );
+    }
+
+    // -- demand vs capacity -----------------------------------------------
+    if let Some(l) = load {
+        check_positive(&mut out, "des", "arrival_rate_per_s", l.arrival_rate_per_s);
+        check_positive(&mut out, "des", "frame_ms", l.frame_ms);
+        check_positive(&mut out, "des", "horizon_ms", l.horizon_ms);
+        if !out.has_errors() {
+            // Offered requests per frame vs how many the aggregate γ can
+            // retire per frame (each γ slot turns over every mean-proc
+            // interval). A coarse screen: it flags saturated sweeps, not
+            // marginal ones.
+            let offered = l.arrival_rate_per_s * l.frame_ms / 1e3;
+            let edge_turnover = l.frame_ms / mean_edge_proc_ms(c).max(1e-9);
+            let cloud_turnover = l.frame_ms / (c.cloud_proc_ms).max(1e-9);
+            use crate::model::server::ServerClass;
+            let edge_capacity: f64 = paper_edge_gamma_sum(t) * edge_turnover;
+            let cloud_capacity =
+                t.num_cloud as f64 * ServerClass::Cloud.default_gamma() * cloud_turnover;
+            let capacity = edge_capacity + cloud_capacity;
+            if offered > capacity {
+                out.push(
+                    Code::DemandExceedsCapacity,
+                    "des",
+                    format!(
+                        "offered load {:.0} requests/frame exceeds estimated aggregate service capacity {:.0}/frame — expect heavy drops",
+                        offered, capacity
+                    ),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_world_is_clean() {
+        let d = verify_scenario(&ScenarioParams::default(), None);
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn paper_default_with_moderate_load_is_clean() {
+        let load =
+            DesLoad { arrival_rate_per_s: 8.0, frame_ms: 3000.0, horizon_ms: 60_000.0 };
+        let d = verify_scenario(&ScenarioParams::default(), Some(&load));
+        assert!(d.is_empty(), "{}", d.render_text());
+    }
+
+    #[test]
+    fn saturating_load_warns() {
+        let load =
+            DesLoad { arrival_rate_per_s: 500.0, frame_ms: 3000.0, horizon_ms: 60_000.0 };
+        let d = verify_scenario(&ScenarioParams::default(), Some(&load));
+        assert!(d.has_code(Code::DemandExceedsCapacity), "{}", d.render_text());
+        assert!(!d.has_errors());
+    }
+
+    #[test]
+    fn no_edges_is_an_error() {
+        let mut s = ScenarioParams::default();
+        s.topology.num_edge = 0;
+        assert!(verify_scenario(&s, None).has_code(Code::NoEdges));
+    }
+
+    #[test]
+    fn inverted_bands_and_bad_params_flagged() {
+        let mut s = ScenarioParams::default();
+        s.catalog.edge_proc_lo_ms = 2000.0;
+        s.catalog.edge_proc_hi_ms = 1000.0;
+        let d = verify_scenario(&s, None);
+        assert!(d.has_code(Code::InvertedBand));
+
+        let mut s = ScenarioParams::default();
+        s.catalog.num_tiers = 0;
+        assert!(verify_scenario(&s, None).has_code(Code::BadParam));
+    }
+
+    #[test]
+    fn impossible_deadline_warns() {
+        let mut s = ScenarioParams::default();
+        s.workload.deadline_mean_ms = 100.0;
+        let d = verify_scenario(&s, None);
+        assert!(d.has_code(Code::DeadlineInfeasible), "{}", d.render_text());
+        assert!(!d.has_errors());
+    }
+
+    #[test]
+    fn default_deadline_clears_the_prescreen() {
+        // Default cloud path: 300·0.9 + 60·0.8 = 318 ms < 1000 ms mean.
+        let s = ScenarioParams::default();
+        assert!(fastest_completion_ms(&s.topology, &s.catalog) < s.workload.deadline_mean_ms);
+    }
+}

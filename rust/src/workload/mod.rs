@@ -65,7 +65,7 @@ pub fn generate_requests(
     assert!(!edge_ids.is_empty(), "need at least one edge server");
     (0..params.num_requests)
         .map(|i| {
-            let covering = *rng.choose(edge_ids).unwrap();
+            let covering = *rng.choose(edge_ids).unwrap(); // lint:allow(unwrap) — non-empty asserted above
             let a = rng.normal_clamped(params.accuracy_mean_pct, params.accuracy_std_pct, 0.0, 100.0);
             let c = rng.normal_clamped(
                 params.deadline_mean_ms,

@@ -1,0 +1,236 @@
+//! End-to-end coverage for `edgeus verify` (DESIGN.md §Static-Analysis):
+//!
+//! * every diagnostic code in the table has one minimal failing fixture
+//!   under `tests/fixtures/verify/` that triggers exactly that code;
+//! * CLI exit semantics (errors → 1, warnings → 0, `--strict` → 1);
+//! * `--json` output is byte-stable and identical to the library's
+//!   rendering;
+//! * the built-in scenario scripts and the shipped example worlds are
+//!   accepted cleanly;
+//! * the verify→simulate property: a config the verifier accepts runs
+//!   the DES without conservation violations across seeds.
+
+use edgeus::prelude::*;
+use edgeus::verify::{verify_des_config, verify_file, Code, VerifyOptions};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(name: &str) -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/verify")
+        .join(name)
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn example_world(name: &str) -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/worlds")
+        .join(name)
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_edgeus"))
+        .args(args)
+        .output()
+        .expect("spawn edgeus")
+}
+
+/// One fixture per code. `E019` (file unreadable) is the one entry whose
+/// "fixture" is a path that intentionally does not exist.
+const TABLE: &[(Code, &str)] = &[
+    (Code::ServerIndex, "E001_server_index.json"),
+    (Code::EdgeIndex, "E002_edge_index.json"),
+    (Code::ServiceIndex, "E003_service_index.json"),
+    (Code::TierIndex, "E004_tier_index.json"),
+    (Code::EventTime, "E005_event_time.json"),
+    (Code::DownWhileDown, "E006_down_while_down.json"),
+    (Code::UpWhileUp, "E007_up_while_up.json"),
+    (Code::LinkPair, "E008_link_pair.json"),
+    (Code::Mobility, "E009_mobility.json"),
+    (Code::LoadBurst, "E010_load_burst.json"),
+    (Code::UnknownEvent, "E011_unknown_event.json"),
+    (Code::UnknownField, "E012_unknown_field.json"),
+    (Code::NoEdges, "E013_no_edges.json"),
+    (Code::BadParam, "E014_bad_param.json"),
+    (Code::InvertedBand, "E015_inverted_band.json"),
+    (Code::DuplicateAssignment, "E016_duplicate_assignment.json"),
+    (Code::DownServerAssignment, "E017_down_server_assignment.json"),
+    (Code::GammaOverflow, "E018_gamma_overflow.json"),
+    (Code::FileUnreadable, "E019_intentionally_missing.json"),
+    (Code::ParseError, "E020_parse_error.json"),
+    (Code::DemandExceedsCapacity, "W101_demand_exceeds_capacity.json"),
+    (Code::ZeroGamma, "W102_zero_gamma.json"),
+    (Code::DeadlineInfeasible, "W103_deadline_infeasible.json"),
+    (Code::EventBeyondHorizon, "W104_event_beyond_horizon.json"),
+    (Code::PermanentOutage, "W105_permanent_outage.json"),
+    (Code::EmptyScript, "I201_empty_script.json"),
+];
+
+fn opts_for(code: Code) -> VerifyOptions {
+    // The beyond-horizon check only fires when a horizon is known.
+    if code == Code::EventBeyondHorizon {
+        VerifyOptions { horizon_ms: Some(60_000.0), ..Default::default() }
+    } else {
+        VerifyOptions::default()
+    }
+}
+
+#[test]
+fn every_code_has_a_fixture_that_triggers_it() {
+    assert_eq!(TABLE.len(), Code::ALL.len(), "table must cover the code table");
+    for (i, code) in Code::ALL.iter().enumerate() {
+        assert_eq!(TABLE[i].0, *code, "table order must match Code::ALL");
+    }
+    for (code, file) in TABLE {
+        let d = verify_file(&fixture(file), &opts_for(*code));
+        assert!(
+            d.has_code(*code),
+            "{file} must trigger {}; got:\n{}",
+            code.as_str(),
+            d.render_text()
+        );
+    }
+}
+
+#[test]
+fn warning_and_info_fixtures_carry_no_errors() {
+    for (code, file) in TABLE {
+        if code.severity() == Severity::Error {
+            continue;
+        }
+        let d = verify_file(&fixture(file), &opts_for(*code));
+        assert!(!d.has_errors(), "{file} should be error-free:\n{}", d.render_text());
+    }
+}
+
+#[test]
+fn cli_exit_codes_follow_severity() {
+    let e001 = fixture("E001_server_index.json");
+    let err = run_cli(&["verify", e001.as_str()]);
+    assert_eq!(err.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&err.stdout).contains("E001"));
+
+    let w105 = fixture("W105_permanent_outage.json");
+    let warn = run_cli(&["verify", w105.as_str()]);
+    assert_eq!(warn.status.code(), Some(0), "warnings alone must not fail");
+    assert!(String::from_utf8_lossy(&warn.stdout).contains("W105"));
+
+    let strict = run_cli(&["verify", w105.as_str(), "--strict"]);
+    assert_eq!(strict.status.code(), Some(1), "--strict promotes warnings");
+}
+
+#[test]
+fn json_output_is_byte_stable_and_matches_library() {
+    let path = fixture("E016_duplicate_assignment.json");
+    let a = run_cli(&["verify", path.as_str(), "--json"]);
+    let b = run_cli(&["verify", path.as_str(), "--json"]);
+    assert_eq!(a.stdout, b.stdout, "two runs must render identical bytes");
+    let expected = format!(
+        "{}\n",
+        verify_file(&path, &VerifyOptions::default()).to_json().pretty()
+    );
+    assert_eq!(String::from_utf8_lossy(&a.stdout), expected);
+    assert_eq!(a.status.code(), Some(1));
+}
+
+#[test]
+fn builtin_scenarios_are_accepted() {
+    let dir = std::env::temp_dir().join("edgeus_verify_cli_builtin");
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in Script::builtin_names() {
+        let s = Script::builtin(name, 120_000.0, 9).unwrap();
+        let path = dir.join(format!("{name}.json"));
+        s.save(path.to_str().unwrap()).unwrap();
+        let out = run_cli(&["verify", path.to_str().unwrap(), "--horizon-s", "120"]);
+        assert_eq!(
+            out.status.code(),
+            Some(0),
+            "{name} must verify cleanly:\n{}",
+            String::from_utf8_lossy(&out.stdout)
+        );
+    }
+}
+
+#[test]
+fn shipped_example_worlds_are_accepted() {
+    for world in ["paper-default.json", "small-campus.json"] {
+        let path = example_world(world);
+        let out = run_cli(&["verify", path.as_str()]);
+        assert_eq!(
+            out.status.code(),
+            Some(0),
+            "{world} must verify cleanly:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(String::from_utf8_lossy(&out.stdout).contains("OK"));
+    }
+}
+
+#[test]
+fn scenario_with_missing_script_exits_with_e019() {
+    let out = run_cli(&["scenario", "--script", "/nonexistent/edgeus-nope.json"]);
+    assert_ne!(out.status.code(), Some(0));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("E019"), "stderr was: {stderr}");
+}
+
+#[test]
+fn scenario_with_malformed_script_exits_with_e020() {
+    let bad = fixture("E020_parse_error.json");
+    let out = run_cli(&["scenario", "--script", bad.as_str()]);
+    assert_ne!(out.status.code(), Some(0));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("E020"), "stderr was: {stderr}");
+}
+
+/// The property the verifier promises: anything it accepts simulates
+/// without conservation violations.
+#[test]
+fn verify_accepted_configs_conserve_requests_across_seeds() {
+    let defaults = DesConfig::default();
+    let small = ScenarioParams {
+        topology: crate_topology(3, 1),
+        catalog: crate_catalog(10, 4),
+        ..ScenarioParams::default()
+    };
+    let configs = vec![
+        DesConfig { horizon_ms: 12_000.0, arrival_rate_per_s: 4.0, ..defaults.clone() },
+        DesConfig {
+            horizon_ms: 12_000.0,
+            arrival_rate_per_s: 4.0,
+            scenario: small,
+            ..defaults.clone()
+        },
+        DesConfig {
+            horizon_ms: 12_000.0,
+            arrival_rate_per_s: 4.0,
+            script: Script::builtin("edge-failover", 12_000.0, defaults.scenario.topology.num_edge),
+            ..defaults
+        },
+    ];
+    for (ci, base) in configs.into_iter().enumerate() {
+        let d = verify_des_config(&base, &[]);
+        assert!(d.is_empty(), "config {ci} must be verify-clean:\n{}", d.render_text());
+        for seed in [1u64, 2, 3] {
+            let mut cfg = base.clone();
+            cfg.seed = seed;
+            let policy = edgeus::coordinator::scheduler_by_name("gus").unwrap();
+            let report = Des::new(cfg, policy.as_ref()).run();
+            report
+                .check_conservation()
+                .unwrap_or_else(|e| panic!("config {ci} seed {seed}: {e}"));
+        }
+    }
+}
+
+fn crate_topology(num_edge: usize, num_cloud: usize) -> edgeus::model::topology::TopologyParams {
+    edgeus::model::topology::TopologyParams { num_edge, num_cloud, ..Default::default() }
+}
+
+fn crate_catalog(num_services: usize, num_tiers: usize) -> edgeus::model::service::CatalogParams {
+    edgeus::model::service::CatalogParams { num_services, num_tiers, ..Default::default() }
+}

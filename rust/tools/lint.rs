@@ -1,0 +1,495 @@
+//! edgeus-lint — repo-local invariant linter, run blocking in CI
+//! (`lint-invariants` job). Four checks, documented in DESIGN.md
+//! §Static-Analysis:
+//!
+//! * **no-alloc** — inside `// lint:no-alloc:begin` / `:end` fenced
+//!   regions, allocation-shaped tokens are forbidden unless the line
+//!   carries `// lint:allow(alloc)`. The DES event loop, GUS fill, and
+//!   candidate enumeration must each carry at least one fence.
+//! * **no-unwrap** — `.unwrap()` / `.expect("` are forbidden in library
+//!   code outside `#[cfg(test)]` modules. The mutex-poisoning idioms
+//!   `.lock().unwrap()` and `.into_inner().unwrap()` are exempt (a
+//!   poisoned lock means a worker already panicked); anything else
+//!   needs a `// lint:allow(unwrap)` marker stating why.
+//! * **usage-sync** — every `Some("name") => cmd_*` dispatch arm in
+//!   `main.rs` must be mentioned in `print_usage`.
+//! * **drop-taxonomy** — every `DropReason` variant must appear in
+//!   `ALL`, in `as_str`, and at a recording site outside `obs/mod.rs`;
+//!   at least one site must pre-declare the full taxonomy via
+//!   `for reason in DropReason::ALL` so exporters emit every label.
+
+use std::fmt;
+use std::path::Path;
+
+/// One rule breach at a file:line.
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// A source tree as (relative path, content) pairs — checks are pure so
+/// the unit tests can feed synthetic trees.
+type Files = Vec<(String, String)>;
+
+const ALLOC_TOKENS: [&str; 10] = [
+    "Vec::new",
+    "vec![",
+    "to_vec(",
+    ".clone()",
+    "Box::new",
+    "String::new",
+    "to_string(",
+    "format!(",
+    ".collect(",
+    "with_capacity(",
+];
+
+/// Files that must contain at least one no-alloc fence (the hot paths
+/// the throughput gate depends on).
+const FENCED_FILES: [&str; 3] =
+    ["sim/des.rs", "coordinator/gus.rs", "model/instance.rs"];
+
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Check A: allocation tokens inside `lint:no-alloc` fences.
+fn check_fences(files: &Files) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (path, text) in files {
+        let mut open_at: Option<usize> = None;
+        let mut fences = 0usize;
+        for (n, line) in text.lines().enumerate() {
+            let ln = n + 1;
+            if line.contains("lint:no-alloc:begin") {
+                if open_at.is_some() {
+                    out.push(Violation {
+                        file: path.clone(),
+                        line: ln,
+                        rule: "no-alloc",
+                        message: "nested lint:no-alloc:begin".into(),
+                    });
+                }
+                open_at = Some(ln);
+                fences += 1;
+                continue;
+            }
+            if line.contains("lint:no-alloc:end") {
+                if open_at.is_none() {
+                    out.push(Violation {
+                        file: path.clone(),
+                        line: ln,
+                        rule: "no-alloc",
+                        message: "lint:no-alloc:end without begin".into(),
+                    });
+                }
+                open_at = None;
+                continue;
+            }
+            if open_at.is_none()
+                || is_comment_line(line)
+                || line.contains("lint:allow(alloc)")
+            {
+                continue;
+            }
+            for tok in ALLOC_TOKENS {
+                if line.contains(tok) {
+                    out.push(Violation {
+                        file: path.clone(),
+                        line: ln,
+                        rule: "no-alloc",
+                        message: format!("allocation token `{tok}` inside no-alloc fence"),
+                    });
+                }
+            }
+        }
+        if let Some(begin) = open_at {
+            out.push(Violation {
+                file: path.clone(),
+                line: begin,
+                rule: "no-alloc",
+                message: "unclosed lint:no-alloc:begin".into(),
+            });
+        }
+    }
+    for want in FENCED_FILES {
+        match files.iter().find(|(p, _)| p.ends_with(want)) {
+            Some((p, text)) if !text.contains("lint:no-alloc:begin") => {
+                out.push(Violation {
+                    file: p.clone(),
+                    line: 1,
+                    rule: "no-alloc",
+                    message: "hot-path file must carry at least one no-alloc fence".into(),
+                });
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Count non-overlapping occurrences of `needle` in `hay`.
+fn occurrences(hay: &str, needle: &str) -> usize {
+    hay.matches(needle).count()
+}
+
+/// Check B: `.unwrap()` / `.expect("` in library code outside tests.
+fn check_unwraps(files: &Files) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (path, text) in files {
+        if path.ends_with("main.rs") {
+            continue; // the CLI binary may exit loudly
+        }
+        // Skip-state for `#[cfg(test)] mod ...` blocks: once the mod's
+        // opening brace is seen, swallow lines until its depth closes.
+        let mut pending_test_mod = false;
+        let mut skip_depth: i64 = 0;
+        for (n, line) in text.lines().enumerate() {
+            let ln = n + 1;
+            if skip_depth > 0 {
+                skip_depth += line.matches('{').count() as i64;
+                skip_depth -= line.matches('}').count() as i64;
+                continue;
+            }
+            if line.contains("#[cfg(test)]") {
+                pending_test_mod = true;
+                continue;
+            }
+            if pending_test_mod {
+                if line.trim_start().starts_with("mod ") || line.contains(" mod ") {
+                    skip_depth = line.matches('{').count() as i64
+                        - line.matches('}').count() as i64;
+                    if skip_depth <= 0 {
+                        skip_depth = 0; // `mod x;` — nothing inline to skip
+                    }
+                    pending_test_mod = false;
+                    continue;
+                }
+                // Other cfg(test) items (fns, consts) are still test-only:
+                // skip just this item header line and keep scanning.
+                pending_test_mod = false;
+            }
+            if is_comment_line(line) || line.contains("lint:allow(unwrap)") {
+                continue;
+            }
+            let raw = occurrences(line, ".unwrap()");
+            let exempt = occurrences(line, ".lock().unwrap()")
+                + occurrences(line, ".into_inner().unwrap()");
+            if raw > exempt {
+                out.push(Violation {
+                    file: path.clone(),
+                    line: ln,
+                    rule: "no-unwrap",
+                    message: "`.unwrap()` in library code (mark lint:allow(unwrap) with a reason, or handle the error)".into(),
+                });
+            }
+            if line.contains(".expect(\"") {
+                out.push(Violation {
+                    file: path.clone(),
+                    line: ln,
+                    rule: "no-unwrap",
+                    message: "`.expect(..)` in library code (mark lint:allow(unwrap) with a reason, or handle the error)".into(),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Check C: every dispatch arm in main.rs is documented in print_usage.
+fn check_usage_sync(files: &Files) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some((path, text)) = files.iter().find(|(p, _)| p.ends_with("main.rs")) else {
+        return out;
+    };
+    let usage = match text.find("fn print_usage") {
+        Some(start) => match text[start..].find("\n}") {
+            Some(end) => &text[start..start + end],
+            None => "",
+        },
+        None => "",
+    };
+    for (n, line) in text.lines().enumerate() {
+        if !(line.contains("Some(\"") && line.contains("=> cmd_")) {
+            continue;
+        }
+        let Some(rest) = line.split("Some(\"").nth(1) else { continue };
+        let Some(name) = rest.split('"').next() else { continue };
+        if !usage.contains(name) {
+            out.push(Violation {
+                file: path.clone(),
+                line: n + 1,
+                rule: "usage-sync",
+                message: format!("subcommand `{name}` missing from print_usage"),
+            });
+        }
+    }
+    if usage.is_empty() {
+        out.push(Violation {
+            file: path.clone(),
+            line: 1,
+            rule: "usage-sync",
+            message: "print_usage not found in main.rs".into(),
+        });
+    }
+    out
+}
+
+/// Check D: the DropReason taxonomy is closed end-to-end.
+fn check_drop_taxonomy(files: &Files) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let Some((obs_path, obs)) = files.iter().find(|(p, _)| p.ends_with("obs/mod.rs"))
+    else {
+        return out;
+    };
+    // Variant names: identifier-comma lines inside `pub enum DropReason`.
+    let mut variants: Vec<&str> = Vec::new();
+    if let Some(start) = obs.find("pub enum DropReason") {
+        for line in obs[start..].lines().skip(1) {
+            let t = line.trim();
+            if t.starts_with('}') {
+                break;
+            }
+            if t.starts_with("//") || t.is_empty() {
+                continue;
+            }
+            let name = t.trim_end_matches(',');
+            if !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric()) {
+                variants.push(name);
+            }
+        }
+    }
+    if variants.is_empty() {
+        out.push(Violation {
+            file: obs_path.clone(),
+            line: 1,
+            rule: "drop-taxonomy",
+            message: "could not parse DropReason variants".into(),
+        });
+        return out;
+    }
+    let section = |anchor: &str| -> &str {
+        match obs.find(anchor) {
+            Some(s) => match obs[s..].find("\n    }") {
+                Some(e) => &obs[s..s + e],
+                None => "",
+            },
+            None => "",
+        }
+    };
+    let all_block = match obs.find("pub const ALL") {
+        Some(s) => match obs[s..].find("];") {
+            Some(e) => &obs[s..s + e],
+            None => "",
+        },
+        None => "",
+    };
+    let as_str_block = section("fn as_str");
+    for v in &variants {
+        let qualified = format!("DropReason::{v}");
+        if !all_block.contains(qualified.as_str()) {
+            out.push(Violation {
+                file: obs_path.clone(),
+                line: 1,
+                rule: "drop-taxonomy",
+                message: format!("variant {v} missing from DropReason::ALL"),
+            });
+        }
+        if !as_str_block.contains(qualified.as_str()) {
+            out.push(Violation {
+                file: obs_path.clone(),
+                line: 1,
+                rule: "drop-taxonomy",
+                message: format!("variant {v} missing from DropReason::as_str"),
+            });
+        }
+        let used_elsewhere = files.iter().any(|(p, t)| {
+            !p.ends_with("obs/mod.rs") && t.contains(qualified.as_str())
+        });
+        if !used_elsewhere {
+            out.push(Violation {
+                file: obs_path.clone(),
+                line: 1,
+                rule: "drop-taxonomy",
+                message: format!("variant {v} is never recorded outside obs/mod.rs"),
+            });
+        }
+    }
+    let declared = files
+        .iter()
+        .any(|(_, t)| t.contains("for reason in DropReason::ALL"));
+    if !declared {
+        out.push(Violation {
+            file: obs_path.clone(),
+            line: 1,
+            rule: "drop-taxonomy",
+            message: "no site pre-declares the full taxonomy (for reason in DropReason::ALL) — exporters would omit untouched labels".into(),
+        });
+    }
+    out
+}
+
+fn run_all(files: &Files) -> Vec<Violation> {
+    let mut out = Vec::new();
+    out.extend(check_fences(files));
+    out.extend(check_unwraps(files));
+    out.extend(check_usage_sync(files));
+    out.extend(check_drop_taxonomy(files));
+    out.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    out
+}
+
+fn collect_tree(root: &Path) -> std::io::Result<Files> {
+    let mut files = Files::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> =
+            std::fs::read_dir(&dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                files.push((rel, std::fs::read_to_string(&p)?));
+            }
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(files)
+}
+
+fn main() {
+    let root = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/src").to_string());
+    let files = match collect_tree(Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("edgeus-lint: cannot read {root}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let violations = run_all(&files);
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        println!("edgeus-lint: {} files clean", files.len());
+    } else {
+        println!("edgeus-lint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(items: &[(&str, &str)]) -> Files {
+        items.iter().map(|(p, t)| (p.to_string(), t.to_string())).collect()
+    }
+
+    #[test]
+    fn fence_catches_seeded_allocation() {
+        let files = tree(&[(
+            "sim/des.rs",
+            "fn f() {\n// lint:no-alloc:begin\nlet v = Vec::new();\n// lint:no-alloc:end\n}\n",
+        )]);
+        let vs = check_fences(&files);
+        assert!(vs.iter().any(|v| v.rule == "no-alloc" && v.line == 3), "{vs:?}");
+    }
+
+    #[test]
+    fn fence_respects_line_escape_and_comments() {
+        let files = tree(&[(
+            "sim/des.rs",
+            "// lint:no-alloc:begin\n// a comment mentioning Vec::new\nlet t = x.clone(); // lint:allow(alloc)\n// lint:no-alloc:end\n",
+        )]);
+        assert!(check_fences(&files).is_empty());
+    }
+
+    #[test]
+    fn fence_flags_unbalanced_markers_and_missing_fences() {
+        let files = tree(&[
+            ("sim/des.rs", "// lint:no-alloc:begin\n"),
+            ("coordinator/gus.rs", "fn fill() {}\n"),
+        ]);
+        let vs = check_fences(&files);
+        assert!(vs.iter().any(|v| v.message.contains("unclosed")), "{vs:?}");
+        assert!(
+            vs.iter().any(|v| v.file == "coordinator/gus.rs"
+                && v.message.contains("must carry")),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn unwrap_caught_in_library_code_but_not_tests() {
+        let files = tree(&[(
+            "coordinator/x.rs",
+            "fn f() { y.unwrap(); }\n\
+             fn g() { z.lock().unwrap(); }\n\
+             fn h() { w.expect(\"boom\"); }\n\
+             fn ok() { v.unwrap(); } // lint:allow(unwrap) — reason\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 fn t() { q.unwrap(); }\n\
+             }\n",
+        )]);
+        let vs = check_unwraps(&files);
+        assert_eq!(vs.len(), 2, "{vs:?}");
+        assert!(vs.iter().all(|v| v.line == 1 || v.line == 3));
+    }
+
+    #[test]
+    fn usage_sync_catches_undocumented_subcommand() {
+        let files = tree(&[(
+            "main.rs",
+            "fn main() {\n    match sub {\n        Some(\"des\") => cmd_des(&a),\n        Some(\"mystery\") => cmd_mystery(&a),\n    }\n}\nfn print_usage() {\n    eprintln!(\"subcommands:\\n des [--rates]\");\n}\n",
+        )]);
+        let vs = check_usage_sync(&files);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert!(vs[0].message.contains("mystery"));
+    }
+
+    #[test]
+    fn drop_taxonomy_catches_unrecorded_variant() {
+        let obs = "pub enum DropReason {\n    A,\n    B,\n}\n\
+                   impl DropReason {\n\
+                   pub const ALL: [DropReason; 2] = [\n    DropReason::A,\n    DropReason::B,\n];\n\
+                   pub fn as_str(self) -> &'static str {\n        match self {\n            DropReason::A => \"a\",\n            DropReason::B => \"b\",\n        }\n    }\n}\n";
+        let user =
+            "fn f() { m.add(DropReason::A); for reason in DropReason::ALL {} }\n";
+        let files = tree(&[("obs/mod.rs", obs), ("sim/des.rs", user)]);
+        let vs = check_drop_taxonomy(&files);
+        assert_eq!(vs.len(), 1, "{vs:?}");
+        assert!(vs[0].message.contains("B is never recorded"));
+    }
+
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = collect_tree(&root).expect("read src tree");
+        let vs = run_all(&files);
+        assert!(
+            vs.is_empty(),
+            "lint violations in tree:\n{}",
+            vs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
