@@ -1,12 +1,14 @@
 //! Bench + CI gate for the allocation-free DES hot path.
 //!
 //! For each offered-load point (low / mid / high), runs the same seeded
-//! simulation twice — `Des::run` (pooled, borrowed frame instances) and
-//! `Des::run_reference` (the pre-pooling clone-the-world oracle) — and
-//! reports simulated request throughput, wall-time per decision frame,
-//! and the pooled-vs-reference speedup. Results are written to
-//! `BENCH_des.json` (CI uploads it as an artifact; committing that
-//! artifact refreshes the regression baseline).
+//! simulation three ways — `Des::run` with the GUS rank cache (`gus`),
+//! `Des::run` with the cache disabled (`gus-nocache`, the legacy
+//! enumerate+sort path), and `Des::run_reference` (the pre-pooling
+//! clone-the-world oracle) — and reports simulated request throughput,
+//! wall-time per decision frame, the pooled-vs-reference speedup, the
+//! cache-on-vs-cache-off speedup, and the steady-state cache hit rate.
+//! Results are written to `BENCH_des.json` (CI uploads it as an
+//! artifact; committing that artifact refreshes the regression baseline).
 //!
 //! Gates (exit code 1 on failure):
 //!   * regression — if a measured baseline exists at
@@ -14,7 +16,10 @@
 //!     wall-time per decision frame must not regress more than 25%
 //!     at any rate;
 //!   * speedup — with `EDGEUS_BENCH_GATE_SPEEDUP=1`, the pooled path
-//!     must be ≥3× the reference throughput at the highest rate.
+//!     must be ≥3× the reference throughput at the highest rate;
+//!   * cache — with `EDGEUS_BENCH_GATE_CACHE=1`, the plain-world
+//!     steady-state cache hit rate must be ≥90% at every rate, and the
+//!     cached path must be ≥2× the uncached path at the highest rate.
 //!
 //! Scale knobs:
 //!   EDGEUS_BENCH_RATES     comma list of offered loads (default
@@ -34,10 +39,15 @@ struct RatePoint {
     generated: u64,
     decisions: u64,
     pooled_ms: f64,
+    nocache_ms: f64,
     reference_ms: f64,
     sim_req_per_s: f64,
     wall_us_per_frame: f64,
+    wall_us_per_frame_nocache: f64,
     speedup: f64,
+    cache_speedup: f64,
+    cache_hit_rate: f64,
+    cache_rebuilds: u64,
 }
 
 fn env_f64(key: &str, default: f64) -> f64 {
@@ -54,6 +64,7 @@ fn main() {
         .unwrap_or_else(|| vec![1_000.0, 10_000.0, 100_000.0]);
 
     let scheduler = scheduler_by_name("gus").expect("gus scheduler");
+    let nocache = scheduler_by_name("gus-nocache").expect("gus-nocache scheduler");
     let mut points = Vec::with_capacity(rates.len());
     let mut tables = Vec::new();
 
@@ -71,6 +82,12 @@ fn main() {
                 Des::new(cfg.clone(), scheduler.as_ref()).run().served
             })
         };
+        let pooled_nocache = {
+            let cfg = cfg.clone();
+            bencher.run(&format!("nocache_{rate}rps"), || {
+                Des::new(cfg.clone(), nocache.as_ref()).run().served
+            })
+        };
         let reference = {
             let cfg = cfg.clone();
             bencher.run(&format!("reference_{rate}rps"), || {
@@ -82,14 +99,20 @@ fn main() {
             generated: probe.generated,
             decisions: probe.decisions,
             pooled_ms: pooled.mean_ms,
+            nocache_ms: pooled_nocache.mean_ms,
             reference_ms: reference.mean_ms,
             sim_req_per_s: probe.generated as f64 / (pooled.mean_ms / 1e3).max(1e-12),
             wall_us_per_frame: pooled.mean_ms * 1e3 / probe.decisions.max(1) as f64,
+            wall_us_per_frame_nocache: pooled_nocache.mean_ms * 1e3
+                / probe.decisions.max(1) as f64,
             speedup: reference.mean_ms / pooled.mean_ms.max(1e-12),
+            cache_speedup: pooled_nocache.mean_ms / pooled.mean_ms.max(1e-12),
+            cache_hit_rate: probe.cache_hit_rate(),
+            cache_rebuilds: probe.cache_rebuilds,
         };
         tables.push(report(
             &format!("des_hot_path @ {rate} req/s offered (items = generated requests)"),
-            &[pooled, reference],
+            &[pooled, pooled_nocache, reference],
         ));
         points.push(point);
     }
@@ -97,12 +120,23 @@ fn main() {
     for t in &tables {
         println!("{t}");
     }
-    println!("| rate (req/s) | generated | decisions | sim req/s | wall µs/frame | speedup vs reference |");
-    println!("|---|---|---|---|---|---|");
+    println!(
+        "| rate (req/s) | generated | decisions | sim req/s | wall µs/frame \
+         | µs/frame nocache | vs reference | vs nocache | cache hit rate |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
     for p in &points {
         println!(
-            "| {} | {} | {} | {:.0} | {:.1} | {:.2}x |",
-            p.rate, p.generated, p.decisions, p.sim_req_per_s, p.wall_us_per_frame, p.speedup
+            "| {} | {} | {} | {:.0} | {:.1} | {:.1} | {:.2}x | {:.2}x | {:.1}% |",
+            p.rate,
+            p.generated,
+            p.decisions,
+            p.sim_req_per_s,
+            p.wall_us_per_frame,
+            p.wall_us_per_frame_nocache,
+            p.speedup,
+            p.cache_speedup,
+            100.0 * p.cache_hit_rate
         );
     }
 
@@ -132,10 +166,15 @@ fn main() {
                     ("generated", Json::num(p.generated as f64)),
                     ("decisions", Json::num(p.decisions as f64)),
                     ("pooled_wall_ms", Json::num(p.pooled_ms)),
+                    ("nocache_wall_ms", Json::num(p.nocache_ms)),
                     ("reference_wall_ms", Json::num(p.reference_ms)),
                     ("sim_req_per_s", Json::num(p.sim_req_per_s)),
                     ("wall_us_per_frame", Json::num(p.wall_us_per_frame)),
+                    ("wall_us_per_frame_nocache", Json::num(p.wall_us_per_frame_nocache)),
                     ("speedup_vs_reference", Json::num(p.speedup)),
+                    ("speedup_vs_nocache", Json::num(p.cache_speedup)),
+                    ("cache_hit_rate", Json::num(p.cache_hit_rate)),
+                    ("cache_rebuilds", Json::num(p.cache_rebuilds as f64)),
                 ])
             })),
         ),
@@ -187,6 +226,40 @@ fn main() {
         );
         if gate_speedup && top.speedup < 3.0 {
             eprintln!("FAIL: pooled hot path is <3x the reference at the highest load");
+            failed = true;
+        }
+    }
+
+    // Gate 3: the rank cache's claims. On a plain world (no scenario
+    // events) classes only miss on first touch, so steady state must be
+    // ≥90% warm; and serving from the cache must beat the legacy
+    // enumerate+sort path ≥2× at the highest load.
+    let gate_cache =
+        std::env::var("EDGEUS_BENCH_GATE_CACHE").map(|v| v == "1").unwrap_or(false);
+    for p in &points {
+        println!(
+            "cache: {} req/s hit rate {:.1}% ({} rebuilds), cached vs nocache {:.2}x{}",
+            p.rate,
+            100.0 * p.cache_hit_rate,
+            p.cache_rebuilds,
+            p.cache_speedup,
+            if gate_cache { " (enforced: ≥90%, top rate ≥2x)" } else { "" }
+        );
+        if gate_cache && p.cache_hit_rate < 0.9 {
+            eprintln!(
+                "FAIL: plain-world steady-state cache hit rate {:.1}% < 90% at {} req/s",
+                100.0 * p.cache_hit_rate,
+                p.rate
+            );
+            failed = true;
+        }
+    }
+    if let Some(top) = points.last() {
+        if gate_cache && top.cache_speedup < 2.0 {
+            eprintln!(
+                "FAIL: rank cache is {:.2}x (<2x) the uncached path at {} req/s",
+                top.cache_speedup, top.rate
+            );
             failed = true;
         }
     }

@@ -10,6 +10,7 @@
 //! Worst-case complexity O(|N| · (|L||M|)² ) from the per-request sort —
 //! the paper's stated bound; the sort dominates.
 
+use crate::coordinator::rank_cache::RankCache;
 use crate::coordinator::us::{
     qos_satisfied, user_satisfaction, Assignment, CapacityTracker, ConstraintMode, Schedule,
 };
@@ -22,30 +23,49 @@ use crate::util::rng::Rng;
 #[derive(Clone, Copy, Debug)]
 pub struct Gus {
     pub mode: ConstraintMode,
+    /// Serve each request from the incremental [`RankCache`] instead of
+    /// re-enumerating and re-sorting its candidates. Exact — schedules
+    /// are bitwise identical either way (see `coordinator::rank_cache`);
+    /// `false` is the legacy path, kept as the `gus-nocache` A/B oracle.
+    pub cached: bool,
 }
 
 impl Default for Gus {
     fn default() -> Self {
-        Gus { mode: ConstraintMode::STRICT }
+        Gus { mode: ConstraintMode::STRICT, cached: true }
     }
 }
 
 impl Gus {
     pub fn with_mode(mode: ConstraintMode) -> Gus {
-        Gus { mode }
+        Gus { mode, cached: true }
+    }
+
+    /// Disable the rank cache (the legacy enumerate+sort path).
+    pub fn uncached(mut self) -> Gus {
+        self.cached = false;
+        self
     }
 
     /// Schedule with an externally-owned capacity tracker (the serving
-    /// path carries residual capacities across decision frames).
+    /// path carries residual capacities across decision frames), writing
+    /// through caller-owned scratch so steady-state calls allocate
+    /// nothing — the serving leader loop keeps `scratch`/`out` warm
+    /// across frames exactly like the DES does.
     pub fn schedule_with_tracker(
         &self,
         inst: &ProblemInstance,
         tracker: &mut CapacityTracker,
-    ) -> Schedule {
-        let mut out = Schedule::empty(inst.num_requests());
-        let (mut cands, mut ranked, mut order) = (Vec::new(), Vec::new(), Vec::new());
-        self.fill(inst, tracker, &mut cands, &mut ranked, &mut order, &mut out);
-        out
+        scratch: &mut SchedScratch,
+        out: &mut Schedule,
+    ) {
+        let SchedScratch { cands, ranked, order, rank_cache, .. } = scratch;
+        if self.cached {
+            rank_cache.prepare(inst);
+            self.fill_cached(inst, tracker, rank_cache, order, out);
+        } else {
+            self.fill(inst, tracker, cands, ranked, order, out);
+        }
     }
 
     /// Algorithm 1 proper, writing into caller-owned buffers. In the DES
@@ -107,11 +127,50 @@ impl Gus {
         }
         // lint:no-alloc:end
     }
+
+    /// Algorithm 1 over the pre-ranked cache: identical decisions to
+    /// [`Gus::fill`] (the walk computes the same first-fit under the same
+    /// total order — see `coordinator::rank_cache`), but each request
+    /// costs one pass over its class's cached list instead of an
+    /// enumerate + score + sort. `cache.prepare(inst)` must have run.
+    fn fill_cached(
+        &self,
+        inst: &ProblemInstance,
+        tracker: &mut CapacityTracker,
+        cache: &RankCache,
+        order: &mut Vec<usize>,
+        out: &mut Schedule,
+    ) {
+        // lint:no-alloc:begin — steady-state cached decision loop: the
+        // priority order reuses warm capacity and the walk is scan-only.
+        out.reset(inst.num_requests());
+        order.clear();
+        order.extend(0..inst.num_requests());
+        order.sort_by_key(|&i| std::cmp::Reverse(inst.requests[i].priority));
+        for &i in order.iter() {
+            let req = &inst.requests[i];
+            if let Some((us, cand)) = cache.walk_best(
+                req,
+                self.mode,
+                inst.max_accuracy_pct,
+                inst.max_completion_ms,
+                tracker,
+            ) {
+                tracker.commit(req, &cand);
+                out.slots[i] = Some(Assignment { request: req.id, candidate: cand, us });
+            }
+        }
+        // lint:no-alloc:end
+    }
 }
 
 impl Scheduler for Gus {
     fn name(&self) -> &'static str {
-        "gus"
+        if self.cached {
+            "gus"
+        } else {
+            "gus-nocache"
+        }
     }
 
     fn schedule_into(
@@ -121,9 +180,14 @@ impl Scheduler for Gus {
         scratch: &mut SchedScratch,
         out: &mut Schedule,
     ) {
-        let SchedScratch { cands, ranked, order, tracker, .. } = scratch;
+        let SchedScratch { cands, ranked, order, tracker, rank_cache, .. } = scratch;
         tracker.reset(inst, self.mode);
-        self.fill(inst, tracker, cands, ranked, order, out);
+        if self.cached {
+            rank_cache.prepare(inst);
+            self.fill_cached(inst, tracker, rank_cache, order, out);
+        } else {
+            self.fill(inst, tracker, cands, ranked, order, out);
+        }
     }
 }
 
@@ -133,7 +197,7 @@ mod tests {
     use crate::coordinator::us::validate_schedule;
     use crate::model::request::Request;
     use crate::model::server::{Server, ServerClass, ServerId};
-    use crate::model::service::{CatalogParams, Placement, ServiceCatalog, TierId};
+    use crate::model::service::{CatalogParams, Placement, ServiceCatalog, ServiceId, TierId};
     use crate::model::topology::{Topology, TopologyParams};
     use crate::util::rng::Rng;
 
@@ -305,6 +369,73 @@ mod tests {
         let s = Gus::default().schedule(&inst, &mut Rng::new(0));
         assert!(s.slots[0].is_none(), "best-effort request must yield");
         assert!(s.slots[1].is_some(), "priority request must be served");
+    }
+
+    #[test]
+    fn cached_walk_matches_legacy_sort_bitwise() {
+        // The rank cache is an optimization, not a policy change: every
+        // slot (assignment and US value) must be bitwise identical.
+        for seed in [1, 2, 3, 12, 13] {
+            let inst = small_instance(40, seed);
+            for mode in [
+                ConstraintMode::STRICT,
+                ConstraintMode::SOFT_QOS,
+                ConstraintMode::HAPPY_COMPUTATION,
+                ConstraintMode::HAPPY_COMMUNICATION,
+            ] {
+                let cached = Gus::with_mode(mode).schedule(&inst, &mut Rng::new(0));
+                let legacy =
+                    Gus::with_mode(mode).uncached().schedule(&inst, &mut Rng::new(0));
+                for (i, (c, l)) in cached.slots.iter().zip(legacy.slots.iter()).enumerate() {
+                    match (c, l) {
+                        (None, None) => {}
+                        (Some(c), Some(l)) => {
+                            assert_eq!(c.candidate.server, l.candidate.server, "req {i}");
+                            assert_eq!(c.candidate.tier, l.candidate.tier, "req {i}");
+                            assert_eq!(c.us.to_bits(), l.us.to_bits(), "req {i}");
+                            assert_eq!(
+                                c.candidate.completion_ms.to_bits(),
+                                l.candidate.completion_ms.to_bits(),
+                                "req {i}"
+                            );
+                        }
+                        (c, l) => panic!("seed {seed} req {i}: cached {c:?} vs legacy {l:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_cache_stays_exact_across_world_mutations() {
+        // Same scratch across frames while the world mutates between
+        // them: the lazily invalidated cache must keep matching a cold
+        // uncached run after every mutation.
+        let mut inst = small_instance(30, 21);
+        let cached = Gus::default();
+        let legacy = Gus::default().uncached();
+        let mut scratch = SchedScratch::default();
+        let mut out = Schedule::empty(0);
+        for frame in 0..6 {
+            match frame {
+                1 => inst.topology.to_mut().set_up(ServerId(1), false),
+                2 => inst.topology.to_mut().set_comm_ms(ServerId(0), ServerId(2), 400.0),
+                3 => inst.topology.to_mut().set_up(ServerId(1), true),
+                4 => inst.placement.to_mut().place(2, ServiceId(1), TierId(0)),
+                _ => {}
+            }
+            cached.schedule_into(&inst, &mut Rng::new(0), &mut scratch, &mut out);
+            let fresh = legacy.schedule(&inst, &mut Rng::new(0));
+            for (c, l) in out.slots.iter().zip(fresh.slots.iter()) {
+                assert_eq!(
+                    c.map(|a| (a.candidate.server, a.candidate.tier, a.us.to_bits())),
+                    l.map(|a| (a.candidate.server, a.candidate.tier, a.us.to_bits())),
+                    "frame {frame}"
+                );
+            }
+        }
+        assert!(scratch.rank_cache.hits > 0, "steady frames must hit the cache");
+        assert!(scratch.rank_cache.misses > 0, "mutations must invalidate");
     }
 
     #[test]

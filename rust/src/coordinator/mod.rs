@@ -14,6 +14,7 @@ pub mod baselines;
 pub mod explain;
 pub mod gus;
 pub mod ilp;
+pub mod rank_cache;
 pub mod us;
 
 use crate::model::{Candidate, ProblemInstance};
@@ -37,6 +38,10 @@ pub struct SchedScratch {
     pub order: Vec<usize>,
     /// Residual-capacity tracker, refilled from the instance per call.
     pub tracker: CapacityTracker,
+    /// Incremental candidate-ranking cache (GUS and the Happy-*
+    /// baselines); entries survive across frames and invalidate lazily
+    /// via world generation counters.
+    pub rank_cache: rank_cache::RankCache,
 }
 
 /// A scheduling policy: produces a full [`Schedule`] for one decision
@@ -69,8 +74,9 @@ pub trait Scheduler {
 
 /// Every scheduler the evaluation compares, in the paper's order.
 ///
-/// Two registry-only entries are deliberately excluded (reachable by name
-/// through [`scheduler_by_name`] but not part of the six-policy sweep):
+/// Three registry-only entries are deliberately excluded (reachable by
+/// name through [`scheduler_by_name`] but not part of the six-policy
+/// sweep):
 ///
 /// * `ilp` — the exact branch-and-bound is exponential in the worst case;
 ///   it anchors the small-instance optimal-gap study but would dominate
@@ -78,7 +84,11 @@ pub trait Scheduler {
 /// * `gus-soft` — the paper's §II "special case" treats the QoS
 ///   thresholds as suggestions, i.e. it optimizes a different feasibility
 ///   notion, so averaging it into the strict-QoS comparison would be
-///   apples-to-oranges. The ablations bench compares it explicitly.
+///   apples-to-oranges. The ablations bench compares it explicitly;
+/// * `gus-nocache` — GUS with the incremental rank cache disabled:
+///   byte-identical schedules to `gus`, kept only as the A/B oracle for
+///   the cache (golden tests, `des_hot_path` bench). Sweeping it would
+///   double-count the same policy.
 pub fn all_schedulers() -> Vec<Box<dyn Scheduler + Send + Sync>> {
     vec![
         Box::new(gus::Gus::default()),
@@ -104,6 +114,10 @@ pub fn scheduler_by_name(name: &str) -> Option<Box<dyn Scheduler + Send + Sync>>
         "gus-soft" | "gus_soft" => {
             Some(Box::new(gus::Gus::with_mode(ConstraintMode::SOFT_QOS)))
         }
+        // Legacy enumerate+sort GUS with the rank cache disabled. A/B
+        // oracle for the cache (des_hot_path bench, golden equivalence
+        // tests); produces byte-identical output to `gus`.
+        "gus-nocache" | "gus_nocache" => Some(Box::new(gus::Gus::default().uncached())),
         "ilp" | "optimal" => Some(Box::new(ilp::BranchAndBound::default())),
         _ => None,
     }
@@ -128,6 +142,7 @@ mod tests {
             "happy-computation",
             "happy-communication",
             "gus-soft",
+            "gus-nocache",
             "ilp",
         ] {
             assert!(scheduler_by_name(n).is_some(), "{n} missing");

@@ -1,0 +1,654 @@
+//! Incremental candidate-ranking cache: takes GUS frames from sort-bound
+//! to walk-bound.
+//!
+//! PR 3 made the DES decision loop allocation-free; the remaining
+//! steady-state cost is algorithmic — GUS re-enumerates and re-sorts every
+//! (server, tier) candidate for every request on every frame, the paper's
+//! O(|N|·(|L||M|)²) bound. But between scenario events the *relative
+//! order* of a request's candidates depends only on its rank class
+//! `(covering server, service)`: the US difference between two candidates
+//! of the same request cancels the request-specific terms
+//! (`A_i`, `C_i`, `T^q_i`), leaving
+//!
+//! ```text
+//! rank_key = w_a · a_kl / Max_as − w_c · (T^comm + T^proc) / Max_cs
+//! ```
+//!
+//! which is a pure function of the class and the world. The cache keeps,
+//! per class, the candidate list sorted by `rank_key` descending and lets
+//! GUS walk it against the residual-capacity tracker — O(|L||M|) per
+//! request, no per-request sort, no re-enumeration.
+//!
+//! ## Exactness
+//!
+//! The cached walk is not an approximation: it yields bitwise-identical
+//! schedules to the legacy enumerate+sort path (the DES golden tests
+//! compare `to_json` output byte for byte). Two mechanisms make that hold:
+//!
+//! 1. The walk recomputes each candidate's `completion_ms` as
+//!    `T^q + T^comm + T^proc` with the same left-associated additions as
+//!    [`ProblemInstance::completion_ms`], and scores it through the same
+//!    [`user_satisfaction`]/[`qos_satisfied`] functions — so every float
+//!    is the same bit pattern the legacy path produced.
+//! 2. Legacy GUS takes the *first fitting* candidate of a stable sort
+//!    under the total order T = (US desc, local-first, lower-tier-first,
+//!    enumeration order). First-fit-of-a-stable-sort equals the T-maximum
+//!    over all fitting candidates, and the walk computes exactly that
+//!    maximum by exhaustive comparison under T. The `rank_key` order is
+//!    only used to *early-exit*: once a fitting best exists, any later
+//!    candidate with `rank_key < best_rank_key − 1e-9` provably loses on
+//!    US (float error in the cancelled request terms is bounded well
+//!    below 1e-12), so the scan stops. The early exit is gated on the
+//!    request's weights bit-matching the weights the keys were built with
+//!    (`w_a = w_c = 1`, the system-wide default); any other weights fall
+//!    back to a full exact scan — still correct, just not shortcut.
+//!
+//! ## Invalidation
+//!
+//! Generation-based and lazy. [`Topology`] carries an up/down generation
+//! and a per-source-row comm generation; [`Placement`] a per-service
+//! generation — all stamped from one process-global counter
+//! ([`crate::model::topology::next_world_gen`]), so freshly built worlds
+//! (the serving leader rebuilds its topology every frame) can never alias
+//! a stale entry. A class entry records the generations it was built
+//! against and rebuilds in [`RankCache::prepare`] when any is stale;
+//! QoS thresholds and queue delays cancel out of the ranking entirely, so
+//! they are deliberately *not* part of the key. Rebuilds of many classes
+//! (first frame, post-outage) fan out over [`crate::benchkit::parallel_map`].
+
+use crate::coordinator::us::{qos_satisfied, user_satisfaction, CapacityTracker, ConstraintMode};
+use crate::model::instance::Candidate;
+use crate::model::request::Request;
+use crate::model::server::ServerId;
+use crate::model::service::{ServiceId, TierId};
+use crate::model::ProblemInstance;
+
+/// Weights the cached `rank_key`s are computed with. The early exit in
+/// [`RankCache::walk_best`] is only sound for requests whose weights
+/// bit-match these; others get a full (still exact) scan.
+const RANK_W_ACCURACY: f64 = 1.0;
+const RANK_W_COMPLETION: f64 = 1.0;
+
+/// Early-exit margin on `rank_key` differences. US is recomputed exactly,
+/// so this only has to dominate the float error of the *cancelled*
+/// request-constant terms — bounded around 1e-13 for any sane world;
+/// 1e-9 leaves four orders of magnitude of slack while costing at most a
+/// handful of extra candidate visits per request.
+const RANK_EPS: f64 = 1e-9;
+
+/// Rebuilding at least this many stale classes in one `prepare` fans out
+/// over `parallel_map`; below it, serial rebuild wins (scoped-thread
+/// setup costs more than the sorts it saves).
+const PARALLEL_REBUILD_THRESHOLD: usize = 16;
+
+/// One pre-ranked candidate. Stores the completion time *split* into its
+/// class-constant parts (`comm_ms`, `proc_ms`) so the walk can
+/// reconstitute `completion_ms = T^q + T^comm + T^proc` bit-for-bit for
+/// any queue delay.
+#[derive(Clone, Copy, Debug)]
+pub struct CachedCand {
+    pub server: ServerId,
+    pub tier: TierId,
+    pub accuracy_pct: f64,
+    /// Covering→server forwarding delay (0.0 exactly for local).
+    pub comm_ms: f64,
+    /// Processing delay at `server`'s class.
+    pub proc_ms: f64,
+    pub comp_cost: f64,
+    pub comm_cost: f64,
+    pub offloaded: bool,
+    /// Class-constant part of US under the default weights; the sort key.
+    pub rank_key: f64,
+    /// Position in the legacy enumeration order — the final tie-breaker
+    /// of the total order T.
+    pub orig: u32,
+}
+
+/// One rank class: the ranked candidates plus the world generations and
+/// normalization constants they were built against.
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    cands: Vec<CachedCand>,
+    built: bool,
+    /// Dedup flag while this class sits on the current stale list.
+    queued: bool,
+    up_gen: u64,
+    comm_row_gen: u64,
+    service_gen: u64,
+    max_as: f64,
+    max_cs: f64,
+}
+
+/// The per-scheduler incremental ranking cache. Lives inside
+/// [`crate::coordinator::SchedScratch`], so the DES carries it warm
+/// across frames while batch callers get a cold one per `schedule()`.
+#[derive(Debug, Default)]
+pub struct RankCache {
+    /// Dense class table, indexed `covering · num_services + service`.
+    entries: Vec<Entry>,
+    num_servers: usize,
+    num_services: usize,
+    /// Scratch list of stale class indices, reused across frames.
+    stale: Vec<usize>,
+    /// Requests whose class entry was already fresh at frame start.
+    pub hits: u64,
+    /// Requests whose class entry had to be (re)built this frame.
+    pub misses: u64,
+    /// Class rebuilds performed (≤ misses: co-class requests share one).
+    pub rebuilds: u64,
+}
+
+impl RankCache {
+    /// Bring every class touched by `inst`'s requests up to date and
+    /// account hits/misses. Called once per frame before the walks; this
+    /// is the only allocating part of the cached path.
+    pub fn prepare(&mut self, inst: &ProblemInstance) {
+        let ns = inst.topology.len();
+        let nk = inst.catalog.num_services;
+        if self.num_servers != ns || self.num_services != nk {
+            self.num_servers = ns;
+            self.num_services = nk;
+            self.entries.clear();
+            self.entries.resize_with(ns * nk, Entry::default);
+        }
+        let up_gen = inst.topology.up_gen();
+        self.stale.clear();
+        for req in inst.requests.iter() {
+            let class = req.covering.0 * nk + req.service.0;
+            let e = &mut self.entries[class];
+            let fresh = e.built
+                && e.up_gen == up_gen
+                && e.comm_row_gen == inst.topology.comm_row_gen(req.covering)
+                && e.service_gen == inst.placement.service_gen(req.service)
+                && e.max_as.to_bits() == inst.max_accuracy_pct.to_bits()
+                && e.max_cs.to_bits() == inst.max_completion_ms.to_bits();
+            if fresh {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                if !e.queued {
+                    e.queued = true;
+                    self.stale.push(class);
+                }
+            }
+        }
+        if self.stale.is_empty() {
+            return;
+        }
+        self.rebuilds += self.stale.len() as u64;
+        if self.stale.len() >= PARALLEL_REBUILD_THRESHOLD {
+            let threads = crate::sim::montecarlo::default_threads();
+            let built: Vec<Vec<CachedCand>> =
+                crate::benchkit::parallel_map(&self.stale, threads, |_, &class| {
+                    let mut cands = Vec::new();
+                    build_class_into(inst, ServerId(class / nk), ServiceId(class % nk), &mut cands);
+                    cands
+                });
+            for (&class, cands) in self.stale.iter().zip(built) {
+                let e = &mut self.entries[class];
+                e.cands = cands;
+                stamp_entry(e, inst, ServerId(class / nk), ServiceId(class % nk), up_gen);
+            }
+        } else {
+            for &class in self.stale.iter() {
+                let covering = ServerId(class / nk);
+                let service = ServiceId(class % nk);
+                let e = &mut self.entries[class];
+                build_class_into(inst, covering, service, &mut e.cands);
+                stamp_entry(e, inst, covering, service, up_gen);
+            }
+        }
+    }
+
+    // lint:no-alloc:begin — the steady-state cached walk: one pass over a
+    // pre-ranked slice per request, no enumeration, no sort, no heap.
+    /// Find the candidate legacy GUS would commit for `req`: the T-maximum
+    /// (US desc, local-first, lower-tier-first, enumeration order) over
+    /// all QoS-feasible candidates that fit the residual capacities.
+    /// Returns the exact `(us, candidate)` the legacy path would produce,
+    /// or `None` when the request must be dropped.
+    ///
+    /// [`RankCache::prepare`] must have run on this instance first.
+    pub fn walk_best(
+        &self,
+        req: &Request,
+        mode: ConstraintMode,
+        max_as: f64,
+        max_cs: f64,
+        tracker: &CapacityTracker,
+    ) -> Option<(f64, Candidate)> {
+        let entry = &self.entries[req.covering.0 * self.num_services + req.service.0];
+        debug_assert!(entry.built, "walk_best before prepare");
+        let keyed = req.w_accuracy.to_bits() == RANK_W_ACCURACY.to_bits()
+            && req.w_completion.to_bits() == RANK_W_COMPLETION.to_bits();
+        let mut best: Option<(f64, Candidate, u32, f64)> = None;
+        for cc in entry.cands.iter() {
+            if let Some((_, _, _, best_key)) = best {
+                if keyed && cc.rank_key < best_key - RANK_EPS {
+                    break;
+                }
+            }
+            let cand = Candidate {
+                server: cc.server,
+                tier: cc.tier,
+                accuracy_pct: cc.accuracy_pct,
+                completion_ms: req.queue_delay_ms + cc.comm_ms + cc.proc_ms,
+                comp_cost: cc.comp_cost,
+                comm_cost: cc.comm_cost,
+                offloaded: cc.offloaded,
+            };
+            if mode.qos && !qos_satisfied(req, &cand) {
+                continue;
+            }
+            let us = user_satisfaction(req, &cand, max_as, max_cs);
+            if !mode.qos && us < 0.0 {
+                continue;
+            }
+            if !tracker.fits(req, &cand) {
+                continue;
+            }
+            let wins = match &best {
+                None => true,
+                // Strictly-greater under T: higher US, then local over
+                // offloaded, then lower tier, then earlier enumeration.
+                Some((best_us, best_cand, best_orig, _)) => us
+                    .total_cmp(best_us)
+                    .then_with(|| best_cand.offloaded.cmp(&cand.offloaded))
+                    .then_with(|| best_cand.tier.cmp(&cand.tier))
+                    .then_with(|| best_orig.cmp(&cc.orig))
+                    .is_gt(),
+            };
+            if wins {
+                best = Some((us, cand, cc.orig, cc.rank_key));
+            }
+        }
+        best.map(|(us, cand, _, _)| (us, cand))
+    }
+    // lint:no-alloc:end
+
+    /// Ranked candidates currently cached for one class, or `None` if the
+    /// class is out of range or was never built. Test/bench oracle access.
+    pub fn ranked_class(&self, covering: ServerId, service: ServiceId) -> Option<&[CachedCand]> {
+        if covering.0 >= self.num_servers || service.0 >= self.num_services {
+            return None;
+        }
+        let e = &self.entries[covering.0 * self.num_services + service.0];
+        if e.built {
+            Some(&e.cands)
+        } else {
+            None
+        }
+    }
+
+    /// Number of classes with a built entry.
+    pub fn built_classes(&self) -> usize {
+        self.entries.iter().filter(|e| e.built).count()
+    }
+
+    /// Warm fraction of all class lookups so far (0.0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Record the world generations and normalization constants a just-built
+/// entry is valid against.
+fn stamp_entry(
+    e: &mut Entry,
+    inst: &ProblemInstance,
+    covering: ServerId,
+    service: ServiceId,
+    up_gen: u64,
+) {
+    e.built = true;
+    e.queued = false;
+    e.up_gen = up_gen;
+    e.comm_row_gen = inst.topology.comm_row_gen(covering);
+    e.service_gen = inst.placement.service_gen(service);
+    e.max_as = inst.max_accuracy_pct;
+    e.max_cs = inst.max_completion_ms;
+}
+
+/// Rebuild one class: mirror [`ProblemInstance::candidates_into`]'s
+/// enumeration exactly (servers ascending, down servers skipped, placed
+/// tiers in placement order), then rank by `rank_key` descending with the
+/// enumeration index as tie-breaker.
+fn build_class_into(
+    inst: &ProblemInstance,
+    covering: ServerId,
+    service: ServiceId,
+    out: &mut Vec<CachedCand>,
+) {
+    out.clear();
+    let max_as = inst.max_accuracy_pct;
+    let max_cs = inst.max_completion_ms;
+    let mut orig: u32 = 0;
+    for j in 0..inst.topology.len() {
+        if !inst.topology.servers[j].up {
+            continue;
+        }
+        let server = ServerId(j);
+        let class_idx = inst.topology.server(server).class.index();
+        let comm_ms = if server == covering {
+            0.0
+        } else {
+            inst.topology.comm_ms(covering, server)
+        };
+        inst.placement
+            .for_each_tier(j, service, inst.catalog.num_tiers, |tier| {
+                let profile = inst.catalog.profile(service, tier);
+                let proc_ms = profile.proc_ms[class_idx];
+                out.push(CachedCand {
+                    server,
+                    tier,
+                    accuracy_pct: profile.accuracy_pct,
+                    comm_ms,
+                    proc_ms,
+                    comp_cost: profile.comp_cost,
+                    comm_cost: profile.comm_cost,
+                    offloaded: server != covering,
+                    rank_key: RANK_W_ACCURACY * profile.accuracy_pct / max_as
+                        - RANK_W_COMPLETION * (comm_ms + proc_ms) / max_cs,
+                    orig,
+                });
+                orig += 1;
+            });
+    }
+    // `sort_unstable` is safe despite the legacy path using a stable
+    // sort: `orig` makes the comparator a total order with no ties.
+    out.sort_unstable_by(|a, b| {
+        b.rank_key.total_cmp(&a.rank_key).then_with(|| a.orig.cmp(&b.orig))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::server::ServerClass;
+    use crate::model::service::{CatalogParams, Placement, ServiceCatalog};
+    use crate::model::topology::{Topology, TopologyParams};
+    use crate::util::rng::Rng;
+
+    fn world(seed: u64) -> (Topology, ServiceCatalog, Placement) {
+        let mut rng = Rng::new(seed);
+        let topology = Topology::paper_default(
+            &TopologyParams { num_edge: 3, num_cloud: 1, ..Default::default() },
+            &mut rng,
+        );
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let classes: Vec<ServerClass> = topology.servers.iter().map(|s| s.class).collect();
+        let placement = Placement::random(&catalog, &classes, &mut rng);
+        (topology, catalog, placement)
+    }
+
+    fn requests(n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        (0..n)
+            .map(|i| {
+                Request::new(i, i % 4, i % 3)
+                    .with_qos(rng.uniform(30.0, 60.0), rng.uniform(1200.0, 8000.0))
+                    .with_queue_delay(rng.uniform(0.0, 500.0))
+            })
+            .collect()
+    }
+
+    /// The legacy path for one request: enumerate, filter, stable-sort,
+    /// first fit. Mirrors `Gus::fill` exactly.
+    fn legacy_best(
+        inst: &ProblemInstance,
+        i: usize,
+        mode: ConstraintMode,
+        tracker: &CapacityTracker,
+    ) -> Option<(f64, Candidate)> {
+        let req = &inst.requests[i];
+        let mut ranked: Vec<(f64, Candidate)> = Vec::new();
+        for cand in inst.candidates(i) {
+            if mode.qos && !qos_satisfied(req, &cand) {
+                continue;
+            }
+            let us = user_satisfaction(req, &cand, inst.max_accuracy_pct, inst.max_completion_ms);
+            if !mode.qos && us < 0.0 {
+                continue;
+            }
+            ranked.push((us, cand));
+        }
+        ranked.sort_by(|a, b| {
+            b.0.total_cmp(&a.0)
+                .then_with(|| a.1.offloaded.cmp(&b.1.offloaded))
+                .then_with(|| a.1.tier.cmp(&b.1.tier))
+        });
+        ranked.into_iter().find(|(_, c)| tracker.fits(req, c))
+    }
+
+    fn assert_same(a: Option<(f64, Candidate)>, b: Option<(f64, Candidate)>, ctx: &str) {
+        match (a, b) {
+            (None, None) => {}
+            (Some((ua, ca)), Some((ub, cb))) => {
+                assert_eq!(ua.to_bits(), ub.to_bits(), "{ctx}: us differs");
+                assert_eq!(ca.server, cb.server, "{ctx}: server differs");
+                assert_eq!(ca.tier, cb.tier, "{ctx}: tier differs");
+                assert_eq!(
+                    ca.completion_ms.to_bits(),
+                    cb.completion_ms.to_bits(),
+                    "{ctx}: completion differs"
+                );
+            }
+            (a, b) => panic!("{ctx}: walk {a:?} vs legacy {b:?}"),
+        }
+    }
+
+    #[test]
+    fn walk_matches_legacy_for_every_mode_and_seed() {
+        for seed in [1, 2, 7, 11] {
+            let (topology, catalog, placement) = world(seed);
+            let inst =
+                ProblemInstance::new(topology, catalog, placement, requests(40, seed))
+                    .with_normalization(100.0, 12_000.0);
+            for mode in [
+                ConstraintMode::STRICT,
+                ConstraintMode::SOFT_QOS,
+                ConstraintMode::HAPPY_COMPUTATION,
+                ConstraintMode::HAPPY_COMMUNICATION,
+            ] {
+                let mut cache = RankCache::default();
+                cache.prepare(&inst);
+                // Walk with a *consuming* tracker so later requests see
+                // contested capacity, like a real frame.
+                let mut tracker = CapacityTracker::new(&inst, mode);
+                for i in 0..inst.num_requests() {
+                    let legacy = legacy_best(&inst, i, mode, &tracker);
+                    let walked = cache.walk_best(
+                        &inst.requests[i],
+                        mode,
+                        inst.max_accuracy_pct,
+                        inst.max_completion_ms,
+                        &tracker,
+                    );
+                    assert_same(walked, legacy, &format!("seed {seed} req {i}"));
+                    if let Some((_, cand)) = walked {
+                        tracker.commit(&inst.requests[i], &cand);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_default_weights_fall_back_to_exact_full_scan() {
+        let (topology, catalog, placement) = world(3);
+        let reqs: Vec<Request> = requests(20, 3)
+            .into_iter()
+            .map(|r| r.with_weights(0.3, 1.7))
+            .collect();
+        let inst = ProblemInstance::new(topology, catalog, placement, reqs)
+            .with_normalization(100.0, 12_000.0);
+        let mut cache = RankCache::default();
+        cache.prepare(&inst);
+        let tracker = CapacityTracker::new(&inst, ConstraintMode::STRICT);
+        for i in 0..inst.num_requests() {
+            let legacy = legacy_best(&inst, i, ConstraintMode::STRICT, &tracker);
+            let walked = cache.walk_best(
+                &inst.requests[i],
+                ConstraintMode::STRICT,
+                inst.max_accuracy_pct,
+                inst.max_completion_ms,
+                &tracker,
+            );
+            assert_same(walked, legacy, &format!("weighted req {i}"));
+        }
+    }
+
+    #[test]
+    fn second_prepare_is_all_hits() {
+        let (topology, catalog, placement) = world(4);
+        let inst = ProblemInstance::new(topology, catalog, placement, requests(30, 4));
+        let mut cache = RankCache::default();
+        cache.prepare(&inst);
+        assert_eq!(cache.hits, 0);
+        assert_eq!(cache.misses, 30);
+        assert!(cache.rebuilds <= 30, "co-class requests share rebuilds");
+        let rebuilds = cache.rebuilds;
+        cache.prepare(&inst);
+        assert_eq!(cache.hits, 30);
+        assert_eq!(cache.misses, 30);
+        assert_eq!(cache.rebuilds, rebuilds, "warm frame rebuilds nothing");
+        assert!(cache.hit_rate() > 0.49 && cache.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn mutations_invalidate_exactly_the_affected_classes() {
+        let (mut topology, catalog, mut placement) = world(5);
+        let reqs = requests(30, 5);
+        {
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            let mut cache = RankCache::default();
+            cache.prepare(&inst);
+            drop(inst);
+            // Comm drift on covering row 0: only classes covered by 0 miss.
+            topology.set_comm_ms(ServerId(0), ServerId(2), 123.0);
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            let (h0, m0) = (cache.hits, cache.misses);
+            cache.prepare(&inst);
+            let covered_by_0 = reqs.iter().filter(|r| r.covering == ServerId(0)).count() as u64;
+            assert_eq!(cache.misses - m0, covered_by_0);
+            assert_eq!(cache.hits - h0, 30 - covered_by_0);
+        }
+        {
+            // Placement change on service 1: only service-1 classes miss.
+            let mut cache = RankCache::default();
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            cache.prepare(&inst);
+            drop(inst);
+            placement.place(0, ServiceId(1), TierId(0));
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            let (h0, m0) = (cache.hits, cache.misses);
+            cache.prepare(&inst);
+            let svc1 = reqs.iter().filter(|r| r.service == ServiceId(1)).count() as u64;
+            assert_eq!(cache.misses - m0, svc1);
+            assert_eq!(cache.hits - h0, 30 - svc1);
+        }
+        {
+            // Outage: every class misses (up_gen is global).
+            let mut cache = RankCache::default();
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            cache.prepare(&inst);
+            drop(inst);
+            topology.set_up(ServerId(1), false);
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, reqs.clone());
+            let m0 = cache.misses;
+            cache.prepare(&inst);
+            assert_eq!(cache.misses - m0, 30);
+            // And the rebuilt entries exclude the down server.
+            for r in reqs.iter().take(5) {
+                let ranked = cache.ranked_class(r.covering, r.service).unwrap();
+                assert!(ranked.iter().all(|c| c.server != ServerId(1)));
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_class_is_sorted_and_mirrors_enumeration() {
+        let (topology, catalog, placement) = world(6);
+        let reqs = requests(12, 6);
+        let inst = ProblemInstance::new(topology, catalog, placement, reqs)
+            .with_normalization(100.0, 12_000.0);
+        let mut cache = RankCache::default();
+        cache.prepare(&inst);
+        for i in 0..inst.num_requests() {
+            let req = &inst.requests[i];
+            let ranked = cache.ranked_class(req.covering, req.service).unwrap();
+            // Descending rank key.
+            for w in ranked.windows(2) {
+                assert!(w[0].rank_key >= w[1].rank_key);
+            }
+            // Content == legacy enumeration, item for item, via `orig`.
+            let legacy = inst.candidates(i);
+            assert_eq!(ranked.len(), legacy.len());
+            let mut by_orig: Vec<&CachedCand> = ranked.iter().collect();
+            by_orig.sort_by_key(|c| c.orig);
+            for (cc, lc) in by_orig.iter().zip(legacy.iter()) {
+                assert_eq!(cc.server, lc.server);
+                assert_eq!(cc.tier, lc.tier);
+                assert_eq!(cc.accuracy_pct.to_bits(), lc.accuracy_pct.to_bits());
+                assert_eq!(
+                    (req.queue_delay_ms + cc.comm_ms + cc.proc_ms).to_bits(),
+                    lc.completion_ms.to_bits(),
+                    "completion split must reconstitute bit-exactly"
+                );
+                assert_eq!(cc.offloaded, lc.offloaded);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_rebuild_matches_serial() {
+        // 9 edges × 4 services > threshold → parallel path; compare
+        // against a cache forced through the serial path class by class.
+        let mut rng = Rng::new(8);
+        let topology =
+            Topology::paper_default(&TopologyParams::default(), &mut rng);
+        let catalog = ServiceCatalog::synthetic(
+            &CatalogParams { num_services: 4, num_tiers: 3, ..Default::default() },
+            &mut rng,
+        );
+        let classes: Vec<ServerClass> = topology.servers.iter().map(|s| s.class).collect();
+        let placement = Placement::random(&catalog, &classes, &mut rng);
+        let all_reqs: Vec<Request> = (0..36)
+            .map(|i| Request::new(i, i % 4, i % 9).with_qos(20.0, 9000.0))
+            .collect();
+        assert!(all_reqs.len() >= PARALLEL_REBUILD_THRESHOLD);
+        let inst =
+            ProblemInstance::new(topology, catalog, placement, all_reqs.clone());
+        let mut par = RankCache::default();
+        par.prepare(&inst); // 36 distinct classes → parallel
+        assert_eq!(par.rebuilds, 36);
+        for chunk in all_reqs.chunks(4) {
+            // ≤ 4 stale classes per prepare → serial.
+            let mut ser = RankCache::default();
+            let sub = ProblemInstance::borrowed(
+                &inst.topology,
+                &inst.catalog,
+                &inst.placement,
+                chunk.to_vec(),
+            );
+            ser.prepare(&sub);
+            for r in chunk {
+                let a = par.ranked_class(r.covering, r.service).unwrap();
+                let b = ser.ranked_class(r.covering, r.service).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.orig, y.orig);
+                    assert_eq!(x.rank_key.to_bits(), y.rank_key.to_bits());
+                }
+            }
+        }
+    }
+}

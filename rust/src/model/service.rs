@@ -171,6 +171,13 @@ pub struct Placement {
     /// entry holds everything (represented implicitly).
     on: Vec<Vec<(ServiceId, TierId)>>,
     cloud_has_all: Vec<bool>,
+    /// Construction-time generation; services never mutated since
+    /// construction report this value (see [`Placement::service_gen`]).
+    base_gen: u64,
+    /// Lazily grown per-service generation overrides, stamped by
+    /// `place`/`evict` on actual mutation. Keeping the vector lazily
+    /// sized means an unmutated placement costs no per-service storage.
+    service_gens: Vec<u64>,
 }
 
 impl Placement {
@@ -202,7 +209,12 @@ impl Placement {
             on.push(mine);
             cloud_has_all.push(false);
         }
-        Placement { on, cloud_has_all }
+        Placement {
+            on,
+            cloud_has_all,
+            base_gen: crate::model::topology::next_world_gen(),
+            service_gens: Vec::new(),
+        }
     }
 
     /// Place everything everywhere (used by unit tests / Happy scenarios).
@@ -213,12 +225,19 @@ impl Placement {
         Placement {
             on: vec![all; num_servers],
             cloud_has_all: vec![false; num_servers],
+            base_gen: crate::model::topology::next_world_gen(),
+            service_gens: Vec::new(),
         }
     }
 
     /// Explicit placement (serving path: the artifacts actually loaded).
     pub fn explicit(on: Vec<Vec<(ServiceId, TierId)>>, cloud_has_all: Vec<bool>) -> Placement {
-        Placement { on, cloud_has_all }
+        Placement {
+            on,
+            cloud_has_all,
+            base_gen: crate::model::topology::next_world_gen(),
+            service_gens: Vec::new(),
+        }
     }
 
     pub fn has(&self, server: usize, k: ServiceId, l: TierId) -> bool {
@@ -273,6 +292,7 @@ impl Placement {
         }
         if let Err(pos) = self.on[server].binary_search(&(k, l)) {
             self.on[server].insert(pos, (k, l));
+            self.bump_service(k);
         }
     }
 
@@ -285,7 +305,23 @@ impl Placement {
         }
         if let Ok(pos) = self.on[server].binary_search(&(k, l)) {
             self.on[server].remove(pos);
+            self.bump_service(k);
         }
+    }
+
+    /// Generation of service `k`'s replica set. A rank-cache entry is
+    /// valid while this matches the value it was built against; only an
+    /// actual `place`/`evict` of the same service changes it.
+    #[inline]
+    pub fn service_gen(&self, k: ServiceId) -> u64 {
+        self.service_gens.get(k.0).copied().unwrap_or(self.base_gen)
+    }
+
+    fn bump_service(&mut self, k: ServiceId) {
+        if self.service_gens.len() <= k.0 {
+            self.service_gens.resize(k.0 + 1, self.base_gen);
+        }
+        self.service_gens[k.0] = crate::model::topology::next_world_gen();
     }
 
     pub fn num_servers(&self) -> usize {
@@ -415,6 +451,26 @@ mod tests {
         // Cloud-has-all servers are unaffected by per-replica mutation.
         p.evict(1, k, l);
         assert!(p.has(1, k, l));
+    }
+
+    #[test]
+    fn service_generation_tracks_only_actual_mutations() {
+        let mut p = Placement::explicit(vec![Vec::new(), Vec::new()], vec![false, true]);
+        let (k, other) = (ServiceId(2), ServiceId(0));
+        let g = p.service_gen(k);
+        assert_eq!(p.service_gen(other), g, "unmutated services share base_gen");
+        p.evict(0, k, TierId(1)); // absent: idempotent no-op, no bump
+        assert_eq!(p.service_gen(k), g);
+        p.place(0, k, TierId(1));
+        let g1 = p.service_gen(k);
+        assert_ne!(g1, g, "place must bump the mutated service");
+        assert_eq!(p.service_gen(other), g, "other services untouched");
+        p.place(0, k, TierId(1)); // duplicate: no bump
+        assert_eq!(p.service_gen(k), g1);
+        p.place(1, k, TierId(0)); // cloud-has-all: no-op, no bump
+        assert_eq!(p.service_gen(k), g1);
+        p.evict(0, k, TierId(1));
+        assert_ne!(p.service_gen(k), g1, "evict must bump");
     }
 
     #[test]

@@ -8,6 +8,19 @@
 
 use crate::model::server::{Server, ServerClass, ServerId};
 use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-global generation source for world mutations. Every draw is
+/// unique, so a freshly constructed `Topology`/`Placement` can never
+/// collide with a stale cache entry stamped from a previous world — the
+/// serving leader loop rebuilds its topology every frame and relies on
+/// exactly this property.
+static WORLD_GEN: AtomicU64 = AtomicU64::new(1);
+
+/// Draw the next globally unique world generation.
+pub fn next_world_gen() -> u64 {
+    WORLD_GEN.fetch_add(1, Ordering::Relaxed)
+}
 
 /// The server graph.
 #[derive(Clone, Debug)]
@@ -18,6 +31,14 @@ pub struct Topology {
     /// so the DES hot path gets one contiguous, cache-friendly block
     /// instead of a pointer-chased `Vec<Vec<f64>>`.
     comm_ms: Box<[f64]>,
+    /// Bumped whenever a server's `up` flag changes through
+    /// [`Topology::set_up`]. Consumed by the coordinator rank cache.
+    up_gen: u64,
+    /// Per-source-row comm generation: `comm_row_gen[a]` is bumped when
+    /// any outgoing delay of server `a` changes. US scores only ever read
+    /// `comm_ms(covering, ·)`, so a rank class keyed on its covering
+    /// server survives drifts on unrelated rows.
+    comm_row_gen: Vec<u64>,
 }
 
 /// Parameters for the default paper-style topology.
@@ -80,7 +101,13 @@ impl Topology {
                 comm_ms[a * n + b] = base * rng.uniform(1.0 - params.jitter, 1.0 + params.jitter);
             }
         }
-        Topology { servers, comm_ms: comm_ms.into_boxed_slice() }
+        let gen = next_world_gen();
+        Topology {
+            servers,
+            comm_ms: comm_ms.into_boxed_slice(),
+            up_gen: gen,
+            comm_row_gen: vec![gen; n],
+        }
     }
 
     /// Explicit construction (tests, serving path).
@@ -89,7 +116,13 @@ impl Topology {
         assert_eq!(comm_ms.len(), n);
         assert!(comm_ms.iter().all(|row| row.len() == n));
         let flat: Vec<f64> = comm_ms.into_iter().flatten().collect();
-        Topology { servers, comm_ms: flat.into_boxed_slice() }
+        let gen = next_world_gen();
+        Topology {
+            servers,
+            comm_ms: flat.into_boxed_slice(),
+            up_gen: gen,
+            comm_row_gen: vec![gen; n],
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -111,9 +144,35 @@ impl Topology {
     }
 
     /// Overwrite one directed link delay (used by the serving path when
-    /// the bandwidth estimator updates its expectation).
+    /// the bandwidth estimator updates its expectation, and by scenario
+    /// `BandwidthDrift` events). Bumps the source row's generation so
+    /// rank-cache classes covering server `a` rebuild lazily.
     pub fn set_comm_ms(&mut self, a: ServerId, b: ServerId, ms: f64) {
         self.comm_ms[a.0 * self.servers.len() + b.0] = ms;
+        self.comm_row_gen[a.0] = next_world_gen();
+    }
+
+    /// Flip a server's availability flag; bumps the up-generation only
+    /// on an actual change (a `ServerDown` on an already-down server must
+    /// not thrash the rank cache). All scenario/serving outage mutations
+    /// route through here so cache invalidation cannot be bypassed.
+    pub fn set_up(&mut self, server: ServerId, up: bool) {
+        if self.servers[server.0].up != up {
+            self.servers[server.0].up = up;
+            self.up_gen = next_world_gen();
+        }
+    }
+
+    /// Generation of the up/down availability state.
+    #[inline]
+    pub fn up_gen(&self) -> u64 {
+        self.up_gen
+    }
+
+    /// Generation of the outgoing comm row of server `a`.
+    #[inline]
+    pub fn comm_row_gen(&self, a: ServerId) -> u64 {
+        self.comm_row_gen[a.0]
     }
 
     /// Snapshot of the full comm matrix (as nested rows, for callers that
@@ -208,6 +267,40 @@ mod tests {
         let mut t = topo();
         t.set_comm_ms(ServerId(0), ServerId(1), 99.0);
         assert_eq!(t.comm_ms(ServerId(0), ServerId(1)), 99.0);
+    }
+
+    #[test]
+    fn set_comm_ms_bumps_only_the_source_row_generation() {
+        let mut t = topo();
+        let g0 = t.comm_row_gen(ServerId(0));
+        let g1 = t.comm_row_gen(ServerId(1));
+        t.set_comm_ms(ServerId(0), ServerId(1), 99.0);
+        assert_ne!(t.comm_row_gen(ServerId(0)), g0, "source row must be bumped");
+        assert_eq!(t.comm_row_gen(ServerId(1)), g1, "other rows must be untouched");
+    }
+
+    #[test]
+    fn set_up_bumps_generation_only_on_actual_change() {
+        let mut t = topo();
+        let g0 = t.up_gen();
+        t.set_up(ServerId(0), true); // already up: no-op
+        assert_eq!(t.up_gen(), g0);
+        t.set_up(ServerId(0), false);
+        let g1 = t.up_gen();
+        assert_ne!(g1, g0);
+        assert!(!t.server(ServerId(0)).up);
+        t.set_up(ServerId(0), false); // already down: no-op
+        assert_eq!(t.up_gen(), g1);
+        t.set_up(ServerId(0), true);
+        assert_ne!(t.up_gen(), g1);
+    }
+
+    #[test]
+    fn fresh_topologies_never_share_generations() {
+        let a = topo();
+        let b = topo();
+        assert_ne!(a.up_gen(), b.up_gen());
+        assert_ne!(a.comm_row_gen(ServerId(0)), b.comm_row_gen(ServerId(0)));
     }
 
     #[test]

@@ -170,7 +170,10 @@ impl ScenarioEngine {
         if server >= topology.len() {
             return false;
         }
-        topology.servers[server].up = up;
+        // Route through the generation-bumping mutator so the rank cache
+        // sees the outage; an already-in-state event still counts as
+        // applied (the return value) but bumps nothing.
+        topology.set_up(ServerId(server), up);
         true
     }
 

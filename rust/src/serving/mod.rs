@@ -23,7 +23,7 @@ pub mod node;
 
 use crate::coordinator::explain::{explain_schedule, Outcome};
 use crate::coordinator::us::Assignment;
-use crate::coordinator::{scheduler_by_name, Schedule, Scheduler};
+use crate::coordinator::{scheduler_by_name, SchedScratch, Schedule, Scheduler};
 use crate::metrics::ServingMetrics;
 use crate::model::request::Request;
 use crate::model::server::{Server, ServerClass};
@@ -400,9 +400,14 @@ impl ServingSystem {
         let edge_edge_link = Link::edge_edge_default();
         let mut estimator = BandwidthEstimator::new(600.0);
 
-        // Leader loop: decision frames.
+        // Leader loop: decision frames. Scheduler working memory and the
+        // schedule output live outside the loop so steady-state frames
+        // reuse warm buffers (and the GUS rank cache) instead of
+        // reallocating per decision.
         let mut frame = FrameClock::new(cfg.frame_ms);
         let mut leader_rng = Rng::new(cfg.seed ^ 0xD15BA7C4);
+        let mut sched_scratch = SchedScratch::default();
+        let mut schedule = Schedule::empty(0);
         let real_tick = std::time::Duration::from_secs_f64(
             (cfg.frame_ms / cfg.time_scale / 1e3 / 20.0).max(0.0005),
         );
@@ -478,7 +483,7 @@ impl ServingSystem {
             .with_normalization(100.0, 12_000.0);
             let sched_w0 =
                 recorder.as_ref().map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
-            let schedule: Schedule = scheduler.schedule(&inst, &mut leader_rng);
+            scheduler.schedule_into(&inst, &mut leader_rng, &mut sched_scratch, &mut schedule);
             if let (Some(r), Some(w0)) = (&recorder, sched_w0) {
                 let w1 = wall_t0.elapsed().as_secs_f64() * 1e3;
                 r.span("leader", "frame.schedule", PID_WALL, 0, w0, w1 - w0, 0);

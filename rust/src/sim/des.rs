@@ -157,9 +157,30 @@ pub struct DesReport {
     /// Per-frame decision explanations; empty unless the run had an
     /// enabled [`Recorder`] (keeps default reports byte-identical).
     pub explain: Vec<FrameExplain>,
+    /// Rank-cache accounting from the pooled scheduler scratch: requests
+    /// whose class ranking was served warm. Zero for policies that keep
+    /// no cache and for `run_reference` (which schedules with cold
+    /// scratch every frame). Deliberately *not* serialized in
+    /// [`DesReport::to_json`]: the dump must stay byte-identical between
+    /// cached, uncached, and reference runs.
+    pub cache_hits: u64,
+    /// Requests whose class ranking had to be (re)built; see `cache_hits`.
+    pub cache_misses: u64,
+    /// Class rebuilds performed (≤ `cache_misses`).
+    pub cache_rebuilds: u64,
 }
 
 impl DesReport {
+    /// Warm fraction of rank-cache lookups (0.0 when no cache ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
     pub fn satisfied_pct(&self) -> f64 {
         if self.generated == 0 {
             0.0
@@ -750,6 +771,13 @@ impl<'a> Des<'a> {
             }
         }
         // lint:no-alloc:end
+        // Harvest rank-cache accounting from the pooled scratch. The
+        // reference path schedules through fresh per-frame scratch, so
+        // its counters stay zero — which is fine: these fields are not
+        // serialized, so pooled and reference dumps remain byte-equal.
+        report.cache_hits = scratch.sched.rank_cache.hits;
+        report.cache_misses = scratch.sched.rank_cache.misses;
+        report.cache_rebuilds = scratch.sched.rank_cache.rebuilds;
         report
     }
 
@@ -960,6 +988,29 @@ mod tests {
             let reference = Des::new(quick_cfg(rate), &gus).run_reference().to_json().dump();
             assert_eq!(pooled, reference, "divergence at rate {rate}");
         }
+    }
+
+    #[test]
+    fn steady_state_rank_cache_hits_dominate() {
+        // Plain world (no scenario events): after the first touch of each
+        // (covering, service) class, every later frame must be warm.
+        let gus = Gus::default();
+        let r = Des::new(quick_cfg(150.0), &gus).run();
+        let lookups = r.cache_hits + r.cache_misses;
+        assert!(lookups > 0, "cached GUS must account lookups");
+        assert!(
+            r.cache_hit_rate() > 0.9,
+            "steady-state hit rate {:.3} ({} hits / {} lookups)",
+            r.cache_hit_rate(),
+            r.cache_hits,
+            lookups
+        );
+        assert!(r.cache_rebuilds <= r.cache_misses);
+        // The uncached oracle keeps no cache at all.
+        let nocache = Gus::default().uncached();
+        let r0 = Des::new(quick_cfg(150.0), &nocache).run();
+        assert_eq!(r0.cache_hits + r0.cache_misses, 0);
+        assert_eq!(r.to_json().dump(), r0.to_json().dump(), "cache must not change output");
     }
 
     #[test]

@@ -107,6 +107,38 @@ fn pooled_run_matches_reference_with_enabled_recorder() {
 }
 
 #[test]
+fn cached_gus_matches_uncached_gus_byte_for_byte() {
+    let cached = Gus::default();
+    let uncached = Gus::default().uncached();
+    for script in variants() {
+        let with_cache = Des::new(cfg(script), &cached).run();
+        let without = Des::new(cfg(script), &uncached).run();
+        assert!(
+            with_cache.cache_hits > 0,
+            "{script:?}: cache never hit — the test is not exercising the cached walk"
+        );
+        assert!(with_cache.cache_misses > 0, "{script:?}: cold start must miss at least once");
+        assert_eq!(
+            without.cache_hits + without.cache_misses,
+            0,
+            "{script:?}: the uncached policy must never consult the rank cache"
+        );
+        assert_eq!(
+            with_cache.to_json().dump(),
+            without.to_json().dump(),
+            "rank-cache walk diverged from enumerate+sort under {script:?}"
+        );
+        if script.is_none() {
+            assert!(
+                with_cache.cache_hit_rate() > 0.9,
+                "plain-world steady-state hit rate {:.3} ≤ 0.9",
+                with_cache.cache_hit_rate()
+            );
+        }
+    }
+}
+
+#[test]
 fn pooled_run_is_deterministic_across_repeats() {
     let gus = Gus::default();
     for script in variants() {

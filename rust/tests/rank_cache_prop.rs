@@ -1,0 +1,165 @@
+//! Invalidation-correctness property for the GUS rank cache, driven by
+//! the builtin scenario scripts: step each script against a live world
+//! with ONE persistent `SchedScratch` (so the cache survives across
+//! frames and must invalidate itself), and after every decision boundary
+//! check that
+//!
+//!   1. the cached schedule is bitwise identical to a fresh
+//!      enumerate+sort (`gus-nocache`) schedule of the same instance, and
+//!   2. every cached ranked class equals a ranking freshly recomputed
+//!      from `ProblemInstance::candidates` — same candidates, same split
+//!      delays (reconstituted completion times match bit for bit), keys
+//!      sorted descending.
+//!
+//! Scripts mutate server up/down state, comm rows, and placements, so a
+//! stale entry surviving any of those would fail here deterministically.
+
+use edgeus::coordinator::gus::Gus;
+use edgeus::coordinator::rank_cache::CachedCand;
+use edgeus::coordinator::{Schedule, Scheduler};
+use edgeus::model::request::Request;
+use edgeus::model::server::{ServerClass, ServerId};
+use edgeus::model::service::{CatalogParams, Placement, ServiceCatalog};
+use edgeus::model::topology::{Topology, TopologyParams};
+use edgeus::model::ProblemInstance;
+use edgeus::scenario::{ScenarioEngine, Script};
+use edgeus::util::rng::Rng;
+
+const HORIZON_MS: f64 = 60_000.0;
+const FRAME_MS: f64 = 3_000.0;
+const NUM_EDGE: usize = 3;
+const NUM_SERVICES: usize = 6;
+const NUM_TIERS: usize = 3;
+
+fn world(seed: u64) -> (Topology, ServiceCatalog, Placement) {
+    let mut rng = Rng::new(seed);
+    let topology = Topology::paper_default(
+        &TopologyParams { num_edge: NUM_EDGE, num_cloud: 1, ..Default::default() },
+        &mut rng,
+    );
+    let catalog = ServiceCatalog::synthetic(
+        &CatalogParams { num_services: NUM_SERVICES, num_tiers: NUM_TIERS, ..Default::default() },
+        &mut rng,
+    );
+    let classes: Vec<ServerClass> = topology.servers.iter().map(|s| s.class).collect();
+    let placement = Placement::random(&catalog, &classes, &mut rng);
+    (topology, catalog, placement)
+}
+
+/// One request per (edge, service) pair so every rank class the world can
+/// produce is looked up — and therefore validated — each frame.
+fn all_class_requests(edge_ids: &[ServerId], rng: &mut Rng) -> Vec<Request> {
+    let mut out = Vec::new();
+    for &e in edge_ids {
+        for k in 0..NUM_SERVICES {
+            out.push(
+                Request::new(out.len(), k, e.0)
+                    .with_qos(rng.uniform(30.0, 65.0), rng.uniform(1500.0, 9000.0))
+                    .with_queue_delay(rng.uniform(0.0, 400.0)),
+            );
+        }
+    }
+    out
+}
+
+fn assert_schedules_identical(a: &Schedule, b: &Schedule, ctx: &str) {
+    assert_eq!(a.slots.len(), b.slots.len(), "{ctx}: slot count");
+    for (i, (sa, sb)) in a.slots.iter().zip(b.slots.iter()).enumerate() {
+        match (sa, sb) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert_eq!(x.request, y.request, "{ctx} slot {i}: request");
+                assert_eq!(x.candidate.server, y.candidate.server, "{ctx} slot {i}: server");
+                assert_eq!(x.candidate.tier, y.candidate.tier, "{ctx} slot {i}: tier");
+                assert_eq!(
+                    x.candidate.completion_ms.to_bits(),
+                    y.candidate.completion_ms.to_bits(),
+                    "{ctx} slot {i}: completion"
+                );
+                assert_eq!(x.us.to_bits(), y.us.to_bits(), "{ctx} slot {i}: us");
+            }
+            _ => panic!("{ctx} slot {i}: one path assigned, the other dropped"),
+        }
+    }
+}
+
+/// Recheck one cached class against a ranking recomputed from scratch via
+/// the instance's own candidate enumeration.
+fn assert_class_fresh(inst: &ProblemInstance, req_idx: usize, cached: &[CachedCand], ctx: &str) {
+    let req = &inst.requests[req_idx];
+    let fresh = inst.candidates(req_idx);
+    assert_eq!(cached.len(), fresh.len(), "{ctx}: candidate count");
+
+    // Keys must be ranked descending under the same total order the
+    // cache sorts with (ties broken by enumeration index).
+    for w in cached.windows(2) {
+        let ord = w[0].rank_key.total_cmp(&w[1].rank_key);
+        assert!(
+            ord.is_gt() || (ord.is_eq() && w[0].orig < w[1].orig),
+            "{ctx}: rank keys out of order"
+        );
+    }
+
+    // Same multiset of candidates: realign by enumeration index and
+    // compare every field, reconstituting completion from the split
+    // delays exactly as the walk does.
+    let mut by_orig: Vec<&CachedCand> = cached.iter().collect();
+    by_orig.sort_by_key(|c| c.orig);
+    for (cc, fc) in by_orig.iter().zip(fresh.iter()) {
+        assert_eq!(cc.server, fc.server, "{ctx}: server");
+        assert_eq!(cc.tier, fc.tier, "{ctx}: tier");
+        assert_eq!(cc.offloaded, fc.offloaded, "{ctx}: offloaded");
+        assert_eq!(cc.accuracy_pct.to_bits(), fc.accuracy_pct.to_bits(), "{ctx}: accuracy");
+        assert_eq!(cc.comp_cost.to_bits(), fc.comp_cost.to_bits(), "{ctx}: comp_cost");
+        assert_eq!(cc.comm_cost.to_bits(), fc.comm_cost.to_bits(), "{ctx}: comm_cost");
+        assert_eq!(
+            (req.queue_delay_ms + cc.comm_ms + cc.proc_ms).to_bits(),
+            fc.completion_ms.to_bits(),
+            "{ctx}: reconstituted completion"
+        );
+    }
+}
+
+#[test]
+fn cached_ranking_survives_every_builtin_scenario() {
+    let cached = Gus::default();
+    let uncached = Gus::default().uncached();
+    for (si, &name) in Script::builtin_names().iter().enumerate() {
+        let (mut topology, catalog, mut placement) = world(0xA11CE + si as u64);
+        let edge_ids = topology.edge_ids();
+        let script = Script::builtin(name, HORIZON_MS, NUM_EDGE)
+            .unwrap_or_else(|| panic!("unknown builtin {name}"));
+        let mut engine = ScenarioEngine::new(script, &topology, NUM_SERVICES, NUM_TIERS);
+
+        let mut scratch = edgeus::coordinator::SchedScratch::default();
+        let mut schedule = Schedule::empty(0);
+        let mut req_rng = Rng::new(0xF00D + si as u64);
+        let mut sched_rng = Rng::new(1);
+        let mut applied_total = 0u64;
+
+        let mut now = 0.0;
+        while now <= HORIZON_MS {
+            applied_total += engine.advance(now, &mut topology, &mut placement);
+            let requests = all_class_requests(&edge_ids, &mut req_rng);
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, requests);
+            let ctx = format!("{name} @ {now}ms");
+
+            cached.schedule_into(&inst, &mut sched_rng, &mut scratch, &mut schedule);
+            let fresh = uncached.schedule(&inst, &mut sched_rng);
+            assert_schedules_identical(&schedule, &fresh, &ctx);
+
+            for (i, req) in inst.requests.iter().enumerate() {
+                let class = scratch
+                    .rank_cache
+                    .ranked_class(req.covering, req.service)
+                    .unwrap_or_else(|| panic!("{ctx}: class ({req:?}) not built"));
+                assert_class_fresh(&inst, i, class, &ctx);
+            }
+            now += FRAME_MS;
+        }
+
+        assert!(applied_total > 0, "{name}: no event ever applied — test is vacuous");
+        assert!(scratch.rank_cache.hits > 0, "{name}: cache never hit");
+        assert!(scratch.rank_cache.misses > 0, "{name}: cache never invalidated");
+    }
+}
