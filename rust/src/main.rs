@@ -56,7 +56,10 @@ fn print_usage() {
          figure --id fig1a|fig1b|fig1c|fig1d [--runs N] [--seed S] [--csv PATH]\n  \
          testbed [--loads 60,120,240,360] [--policies gus,random,local-all,offload-all]\n          \
          [--scale 50] [--artifacts DIR]\n  \
-         serve [--scheduler gus] [--requests N] [--scale 50] [--artifacts DIR]\n  \
+         serve [--scheduler gus] [--requests N] [--scale 50] [--artifacts DIR]\n        \
+         [--scenario NAME | --script FILE.json] [--synthetic] [--seed S]\n        \
+         scenario scripts replay live (outages, bursts, drift, mobility, placement);\n        \
+         --synthetic mocks inference (no artifacts needed); inputs gated via verify\n  \
          optimal-gap [--sizes 4,6,8,10] [--instances 20] [--seed S]\n  \
          simulate [--config cfg.json] [--runs N]\n  \
          des [--rates 1,4,16,64] [--policies gus,local-all] [--horizon-s 60]\n  \
@@ -417,8 +420,9 @@ fn cmd_testbed(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use edgeus::scenario::Script;
     let defaults = ServingConfig::default();
-    let cfg = ServingConfig {
+    let mut cfg = ServingConfig {
         artifacts_dir: args.get_or("artifacts", "artifacts").to_string(),
         scheduler: args.get_or("scheduler", "gus").to_string(),
         total_requests: args.get_usize("requests", defaults.total_requests),
@@ -426,12 +430,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", defaults.seed),
         deadline_ms: args.get_f64("deadline-ms", defaults.deadline_ms),
         min_accuracy_pct: args.get_f64("min-accuracy", defaults.min_accuracy_pct),
+        synthetic: args.flag("synthetic"),
         ..defaults
     };
-    gate_diagnostics("serving config", &edgeus::verify::verify_serving_config(&cfg))?;
+    // Scenario replay against the live runtime: a built-in by name, or a
+    // JSON script file. File scripts are verified as *text* so every
+    // diagnostic is anchored to the event's byte offset in the file.
+    let script_from_file = args.get("script").is_some();
+    cfg.script = match (args.get("scenario"), args.get("script")) {
+        (Some(_), Some(_)) => anyhow::bail!("--scenario and --script are mutually exclusive"),
+        (Some(name), None) => Some(
+            Script::builtin(name, cfg.window_ms, cfg.num_edge)
+                .with_context(|| format!("unknown scenario {name} (see `edgeus scenario --list`)"))?,
+        ),
+        (None, Some(path)) => {
+            use edgeus::verify::{Code, Diagnostics};
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    let mut d = Diagnostics::new();
+                    d.push(Code::FileUnreadable, path, format!("{e:#}"));
+                    eprint!("{}", d.render_text());
+                    std::process::exit(1);
+                }
+            };
+            // Tier bounds are manifest-dependent; ServingSystem::new
+            // re-checks against the real ladder after loading it.
+            let shape = edgeus::verify::WorldShape {
+                num_servers: cfg.num_edge + 1,
+                num_edges: cfg.num_edge,
+                num_services: 1,
+                num_tiers: usize::MAX,
+            };
+            let d = edgeus::verify::verify_script_text(
+                &text,
+                &shape,
+                Some(cfg.window_ms + cfg.deadline_ms),
+            );
+            if !d.is_empty() {
+                eprint!("{}", d.render_text());
+            }
+            if d.has_errors() {
+                std::process::exit(1);
+            }
+            Some(Script::parse(&text).with_context(|| format!("parsing {path}"))?)
+        }
+        (None, None) => None,
+    };
+    // File scripts were already gated above with byte offsets; strip the
+    // script from the config-level gate so diagnostics don't repeat.
+    let gate_cfg =
+        if script_from_file { ServingConfig { script: None, ..cfg.clone() } } else { cfg.clone() };
+    gate_diagnostics("serving config", &edgeus::verify::verify_serving_config(&gate_cfg))?;
     eprintln!(
-        "serving {} requests with {} (time scale {}x)...",
-        cfg.total_requests, cfg.scheduler, cfg.time_scale
+        "serving {} requests with {} (time scale {}x{}{})...",
+        cfg.total_requests,
+        cfg.scheduler,
+        cfg.time_scale,
+        if cfg.synthetic { ", synthetic inference" } else { "" },
+        cfg.script
+            .as_ref()
+            .map(|s| format!(", scenario {} ({} events)", s.name, s.events.len()))
+            .unwrap_or_default(),
     );
     let recorder = obs_recorder(args);
     let mut system = ServingSystem::new(cfg)?;
@@ -440,6 +500,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let metrics = system.run()?;
     println!("{}", metrics.summary_markdown());
+    if !metrics.phases.is_empty() {
+        println!("\n## scenario phases\n\n{}", metrics.phases_markdown());
+    }
     if let Some(r) = &recorder {
         write_obs_outputs(args, r)?;
     }

@@ -96,6 +96,33 @@ impl Series {
     }
 }
 
+/// One scenario phase of a serving run: the stretch of world time between
+/// two applied scripted events (or run start/end). Requests are assigned
+/// to phases by arrival time, so phase totals partition the run's
+/// requests exactly.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseMetrics {
+    /// The applied event that opened this phase (`"start"` for the prefix
+    /// before the first event).
+    pub label: String,
+    /// Phase start, simulated ms.
+    pub from_ms: f64,
+    pub requests: u64,
+    pub served: u64,
+    pub satisfied: u64,
+    pub dropped: u64,
+}
+
+impl PhaseMetrics {
+    pub fn satisfied_pct(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            100.0 * self.satisfied as f64 / self.requests as f64
+        }
+    }
+}
+
 /// End-to-end serving metrics for one testbed run.
 #[derive(Clone, Debug)]
 pub struct ServingMetrics {
@@ -114,6 +141,10 @@ pub struct ServingMetrics {
     /// Model-inference latency alone (ms).
     pub inference: Histogram,
     pub wall_ms: f64,
+    /// Scenario-phase segmentation (empty for unscripted runs). When
+    /// non-empty, phase totals partition the run
+    /// (see [`ServingMetrics::check_conservation`]).
+    pub phases: Vec<PhaseMetrics>,
 }
 
 impl Default for ServingMetrics {
@@ -130,6 +161,7 @@ impl Default for ServingMetrics {
             latency: Histogram::exponential(1.0, 2.0, 16),
             inference: Histogram::exponential(0.125, 2.0, 16),
             wall_ms: 0.0,
+            phases: Vec::new(),
         }
     }
 }
@@ -187,7 +219,62 @@ impl ServingMetrics {
                 self.served, self.dropped, self.total_requests
             ));
         }
+        if !self.phases.is_empty() {
+            let (mut req, mut srv, mut sat, mut drp) = (0u64, 0u64, 0u64, 0u64);
+            for p in &self.phases {
+                if p.served + p.dropped != p.requests {
+                    return Err(format!(
+                        "phase '{}': served ({}) + dropped ({}) != requests ({})",
+                        p.label, p.served, p.dropped, p.requests
+                    ));
+                }
+                if p.satisfied > p.served {
+                    return Err(format!(
+                        "phase '{}': satisfied ({}) > served ({})",
+                        p.label, p.satisfied, p.served
+                    ));
+                }
+                req += p.requests;
+                srv += p.served;
+                sat += p.satisfied;
+                drp += p.dropped;
+            }
+            if (req, srv, sat, drp)
+                != (self.total_requests, self.served, self.satisfied, self.dropped)
+            {
+                return Err(format!(
+                    "phase totals ({req}/{srv}/{sat}/{drp}) do not partition the run \
+                     ({}/{}/{}/{})",
+                    self.total_requests, self.served, self.satisfied, self.dropped
+                ));
+            }
+        }
         Ok(())
+    }
+
+    /// Markdown table of the scenario-phase segmentation; empty string for
+    /// unscripted runs.
+    pub fn phases_markdown(&self) -> String {
+        if self.phases.is_empty() {
+            return String::new();
+        }
+        let mut out = String::from(
+            "| phase | from (s) | requests | served | satisfied | dropped |\n\
+             |---|---|---|---|---|---|\n",
+        );
+        for p in &self.phases {
+            out.push_str(&format!(
+                "| {} | {:.1} | {} | {} | {} ({:.1}%) | {} |\n",
+                p.label,
+                p.from_ms / 1000.0,
+                p.requests,
+                p.served,
+                p.satisfied,
+                p.satisfied_pct(),
+                p.dropped,
+            ));
+        }
+        out
     }
 
     /// Human-readable per-reason drop breakdown, `-` when no drops.
@@ -338,5 +425,46 @@ mod tests {
         assert!(m.check_conservation().is_err());
         // The empty default conserves trivially.
         ServingMetrics::default().check_conservation().unwrap();
+    }
+
+    #[test]
+    fn phase_totals_must_partition_the_run() {
+        let mut m = ServingMetrics {
+            total_requests: 6,
+            served: 5,
+            satisfied: 4,
+            ..ServingMetrics::default()
+        };
+        m.add_drop(DropReason::ServerDown);
+        m.phases = vec![
+            PhaseMetrics {
+                label: "start".into(),
+                from_ms: 0.0,
+                requests: 4,
+                served: 4,
+                satisfied: 3,
+                dropped: 0,
+            },
+            PhaseMetrics {
+                label: "server_down".into(),
+                from_ms: 9000.0,
+                requests: 2,
+                served: 1,
+                satisfied: 1,
+                dropped: 1,
+            },
+        ];
+        m.check_conservation().unwrap();
+        assert!((m.phases[1].satisfied_pct() - 50.0).abs() < 1e-12);
+        let md = m.phases_markdown();
+        assert!(md.contains("| server_down | 9.0 | 2 | 1 | 1 (50.0%) | 1 |"), "{md}");
+
+        // A phase losing a request breaks conservation.
+        m.phases[1].requests = 1;
+        m.phases[1].dropped = 0;
+        assert!(m.check_conservation().is_err());
+        // Unscripted runs (no phases) are exempt.
+        m.phases.clear();
+        m.check_conservation().unwrap();
     }
 }

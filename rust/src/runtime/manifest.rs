@@ -82,6 +82,37 @@ impl Manifest {
         })
     }
 
+    /// A manifest that needs no files on disk: the accuracy ladder the
+    /// serving runtime uses when inference is mocked (`--synthetic`), so
+    /// scenario replay / parity tests / CI smoke run without compiled
+    /// artifacts or a PJRT backend. Tier accuracies bracket the default
+    /// 50% QoS floor the same way the paper's ladder does.
+    pub fn synthetic() -> Manifest {
+        let tier = |name: &str, acc: f64, params: u64| ArtifactInfo {
+            name: format!("synthetic_{name}_b1"),
+            tier: name.to_string(),
+            batch: 1,
+            file: format!("synthetic_{name}_b1.hlo.txt"),
+            input_shape: vec![1, 8, 8, 1],
+            output_shape: vec![1, 10],
+            profile_accuracy_pct: acc,
+            params,
+            flops_per_image: params * 2,
+            sha256: String::new(),
+        };
+        Manifest {
+            dir: "<synthetic>".to_string(),
+            image_size: 8,
+            image_channels: 1,
+            num_classes: 10,
+            artifacts: vec![
+                tier("tiny", 40.0, 7_000),
+                tier("small", 52.0, 30_000),
+                tier("base", 63.0, 100_000),
+            ],
+        }
+    }
+
     /// Artifact for a (tier, batch) pair.
     pub fn find(&self, tier: &str, batch: usize) -> Option<&ArtifactInfo> {
         self.artifacts.iter().find(|a| a.tier == tier && a.batch == batch)
@@ -166,5 +197,18 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(Manifest::parse("/tmp", "{nope").is_err());
+    }
+
+    #[test]
+    fn synthetic_ladder_brackets_default_qos_floor() {
+        let m = Manifest::synthetic();
+        assert_eq!(m.tiers(), vec!["tiny", "small", "base"]);
+        let accs: Vec<f64> =
+            m.artifacts.iter().map(|a| a.profile_accuracy_pct).collect();
+        assert!(accs.windows(2).all(|w| w[0] < w[1]), "ladder ascends: {accs:?}");
+        assert!(accs.first().copied() < Some(50.0) && accs.last().copied() > Some(50.0));
+        for t in m.tiers() {
+            assert!(m.find(&t, 1).is_some(), "every tier serves batch 1");
+        }
     }
 }

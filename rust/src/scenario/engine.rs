@@ -39,6 +39,16 @@ pub struct ScenarioEngine {
     /// Catalog bounds for validating `PlacementChange` targets.
     num_services: usize,
     num_tiers: usize,
+    /// Latest drift factor applied to any edge↔cloud link (1.0 = nominal).
+    /// The serving runtime biases its `BandwidthEstimator` by this instead
+    /// of reading the comm matrix (which it derives live per frame).
+    backhaul_drift: f64,
+    /// Latest drift factor applied to any edge↔edge link (1.0 = nominal).
+    peer_drift: f64,
+    /// `(world time applied, event label)` for every applied event, in
+    /// application order — the phase boundaries for scenario-segmented
+    /// metrics reporting.
+    applied_log: Vec<(f64, &'static str)>,
     /// Total events applied so far (skipped out-of-range events excluded).
     pub applied_total: u64,
 }
@@ -60,6 +70,9 @@ impl ScenarioEngine {
             burst_until_ms: f64::NEG_INFINITY,
             num_services,
             num_tiers,
+            backhaul_drift: 1.0,
+            peer_drift: 1.0,
+            applied_log: Vec::new(),
             applied_total: 0,
             script,
         }
@@ -94,6 +107,7 @@ impl ScenarioEngine {
             self.cursor += 1;
             if self.apply(&ev, topology, placement) {
                 applied += 1;
+                self.applied_log.push((now_ms, ev.kind.label()));
                 if let Some(r) = obs {
                     let label = ev.kind.label();
                     r.instant("scenario", label, crate::obs::PID_VIRTUAL, 0, now_ms, "", 0);
@@ -121,6 +135,7 @@ impl ScenarioEngine {
             EventKind::ServerUp { server } => self.set_up(*server, true, topology),
             EventKind::BandwidthDrift { link, factor } => {
                 let n = topology.len();
+                let (mut hit_backhaul, mut hit_peer) = (false, false);
                 for a in 0..n {
                     let a_cloud = topology.servers[a].is_cloud();
                     for b in 0..n {
@@ -134,8 +149,19 @@ impl ScenarioEngine {
                                 ServerId(b),
                                 self.baseline_comm[a][b] * factor,
                             );
+                            if a_cloud || b_cloud {
+                                hit_backhaul = true;
+                            } else {
+                                hit_peer = true;
+                            }
                         }
                     }
+                }
+                if hit_backhaul {
+                    self.backhaul_drift = *factor;
+                }
+                if hit_peer {
+                    self.peer_drift = *factor;
                 }
                 true
             }
@@ -215,6 +241,55 @@ impl ScenarioEngine {
             .map(|pos| if live(pos) { 1.0 } else { 0.0 })
             .collect();
         pick_weighted(&uniform, rng)
+    }
+
+    /// The live burst window as `(rate multiplier, expires at ms)` —
+    /// `(1.0, NEG_INFINITY)` outside any burst. The serving leader pushes
+    /// this into the generator's shared arrival state at the frame
+    /// boundary where the burst event applies.
+    pub fn burst_window(&self) -> (f64, f64) {
+        (self.burst_multiplier, self.burst_until_ms)
+    }
+
+    /// Latest drift factor applied to any edge↔cloud link (1.0 outside a
+    /// drift). Lets the serving runtime bias its `BandwidthEstimator`
+    /// the way the DES sees the scaled comm matrix.
+    pub fn backhaul_drift(&self) -> f64 {
+        self.backhaul_drift
+    }
+
+    /// Latest drift factor applied to any edge↔edge link (1.0 outside a
+    /// drift).
+    pub fn peer_drift(&self) -> f64 {
+        self.peer_drift
+    }
+
+    /// Every applied event as `(world time applied, label)`, in
+    /// application order — the phase boundaries for scenario-segmented
+    /// metrics.
+    pub fn applied_events(&self) -> &[(f64, &'static str)] {
+        &self.applied_log
+    }
+
+    /// Write the effective arrival weight per edge *position* into `out`:
+    /// mobility weights masked by liveness, falling back to uniform over
+    /// the live edges when all live weight is zero — exactly the policy
+    /// [`ScenarioEngine::pick_edge`] draws with. The serving generator
+    /// thread samples from this snapshot between frame boundaries.
+    pub fn edge_weights_into(&self, topology: &Topology, out: &mut Vec<f64>) {
+        let live = |pos: usize| topology.servers[self.edge_ids[pos]].up;
+        out.clear();
+        out.extend(
+            self.weights
+                .iter()
+                .enumerate()
+                .map(|(pos, w)| if live(pos) { *w } else { 0.0 }),
+        );
+        if !out.iter().any(|w| *w > 0.0) {
+            for (pos, w) in out.iter_mut().enumerate() {
+                *w = if live(pos) { 1.0 } else { 0.0 };
+            }
+        }
     }
 
     /// Remaining unapplied events.
@@ -420,5 +495,68 @@ mod tests {
         assert!(plc.has(0, ServiceId(1), TierId(2)));
         assert_eq!(e.advance(10.0, &mut topo, &mut plc), 1, "bad target skipped");
         assert!(!plc.has(0, ServiceId(1), TierId(2)));
+    }
+
+    #[test]
+    fn drift_factors_track_by_link_class_and_log_records_phases() {
+        let (mut topo, mut plc, _) = world();
+        let script = Script::new(
+            "s",
+            vec![
+                ScriptedEvent {
+                    at_ms: 0.0,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeCloud, factor: 30.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 100.0,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::EdgeEdge, factor: 2.0 },
+                },
+                ScriptedEvent {
+                    at_ms: 200.0,
+                    kind: EventKind::BandwidthDrift { link: LinkClass::All, factor: 1.0 },
+                },
+            ],
+        );
+        let mut e = engine_for(script, &topo);
+        assert_eq!((e.backhaul_drift(), e.peer_drift()), (1.0, 1.0));
+        e.advance(0.0, &mut topo, &mut plc);
+        assert_eq!((e.backhaul_drift(), e.peer_drift()), (30.0, 1.0));
+        e.advance(100.0, &mut topo, &mut plc);
+        assert_eq!((e.backhaul_drift(), e.peer_drift()), (30.0, 2.0));
+        e.advance(250.0, &mut topo, &mut plc);
+        assert_eq!((e.backhaul_drift(), e.peer_drift()), (1.0, 1.0));
+        assert_eq!(
+            e.applied_events(),
+            &[
+                (0.0, "bandwidth_drift"),
+                (100.0, "bandwidth_drift"),
+                (250.0, "bandwidth_drift")
+            ]
+        );
+    }
+
+    #[test]
+    fn edge_weights_mask_outages_with_live_uniform_fallback() {
+        let (mut topo, mut plc, _) = world();
+        let script = Script::new(
+            "s",
+            vec![ScriptedEvent {
+                at_ms: 0.0,
+                kind: EventKind::UserMobility { from_edge: 1, to_edge: 0, fraction: 1.0 },
+            }],
+        );
+        let mut e = engine_for(script, &topo);
+        e.advance(0.0, &mut topo, &mut plc);
+        let mut w = Vec::new();
+        e.edge_weights_into(&topo, &mut w);
+        assert_eq!(w, vec![2.0, 0.0, 1.0]);
+        // Edge 0 dies: its (concentrated) weight is masked.
+        topo.servers[0].up = false;
+        e.edge_weights_into(&topo, &mut w);
+        assert_eq!(w, vec![0.0, 0.0, 1.0]);
+        // All weighted edges die: uniform over the remaining live edge.
+        topo.servers[2].up = false;
+        e.edge_weights_into(&topo, &mut w);
+        assert_eq!(w, vec![0.0, 1.0, 0.0]);
     }
 }

@@ -11,9 +11,15 @@
 //!   paper's `E[B_{t+1}] = (B_t + B_{t-1})/2` estimator;
 //! * every served request runs real EdgeNet inference through PJRT on the
 //!   node's engine thread, embedded in the node's calibrated
-//!   processing-delay profile (edge ≈ 1300 ms, cloud ≈ 300 ms);
+//!   processing-delay profile (edge ≈ 1300 ms, cloud ≈ 300 ms), or a mock
+//!   engine when [`ServingConfig::synthetic`] is set (no artifacts
+//!   needed);
 //! * satisfaction is scored exactly as in Def. II.1 against the request's
-//!   (A_i, C_i).
+//!   (A_i, C_i);
+//! * an optional scenario [`Script`] replays live-world dynamics at frame
+//!   boundaries — outages, mobility, bursts, bandwidth drift, placement
+//!   churn — through the same [`ScenarioEngine`] the DES uses (DESIGN.md
+//!   §Serving-Scenarios).
 //!
 //! Everything runs in scaled simulated time (see [`clock::SimClock`]) so
 //! a two-hour-equivalent run takes seconds while preserving every ratio.
@@ -24,19 +30,21 @@ pub mod node;
 use crate::coordinator::explain::{explain_schedule, Outcome};
 use crate::coordinator::us::Assignment;
 use crate::coordinator::{scheduler_by_name, SchedScratch, Schedule, Scheduler};
-use crate::metrics::ServingMetrics;
+use crate::metrics::{PhaseMetrics, ServingMetrics};
 use crate::model::request::Request;
 use crate::model::server::{Server, ServerClass};
 use crate::model::service::{Placement, ServiceCatalog, ServiceId, TierId, TierProfile};
 use crate::model::topology::Topology;
-use crate::model::ProblemInstance;
+use crate::model::{ProblemInstance, ServerId};
 use crate::net::{BandwidthEstimator, Link};
 use crate::obs::{DropReason, Recorder, PID_VIRTUAL, PID_WALL};
 use crate::runtime::Manifest;
+use crate::scenario::{EventKind, ScenarioEngine, Script};
 use crate::serving::clock::SimClock;
-use crate::serving::node::{Completion, ExecJob, ServerNode};
+use crate::serving::node::{Completion, ExecJob, InferenceHandle, ServerNode};
 use crate::sim::{AdmissionQueue, FrameClock};
 use crate::util::rng::Rng;
+use crate::workload::pick_weighted;
 use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
@@ -79,6 +87,12 @@ pub struct ServingConfig {
     /// Simulated ms per real ms (1.0 = real time).
     pub time_scale: f64,
     pub seed: u64,
+    /// Scenario script replayed against the live world at frame
+    /// boundaries (None = static world, the pre-scenario behavior).
+    pub script: Option<Script>,
+    /// Mock inference: serve canned logits through the real thread/channel
+    /// topology instead of PJRT — runs without compiled artifacts.
+    pub synthetic: bool,
 }
 
 impl Default for ServingConfig {
@@ -104,6 +118,8 @@ impl Default for ServingConfig {
             tier_slowdown: 1.10,
             time_scale: 50.0,
             seed: 7,
+            script: None,
+            synthetic: false,
         }
     }
 }
@@ -116,29 +132,169 @@ struct ServeRequest {
     images: Vec<f32>,
 }
 
+/// Per-frame world snapshot handed to a [`ServingSystem::with_probe`]
+/// observer after the scenario advance and dispatch of each fired frame —
+/// the hook the live-path property tests assert invariants on
+/// (committed inflight ≤ γ, no dispatch to a down server).
+#[derive(Clone, Debug)]
+pub struct FrameProbe {
+    pub now_ms: f64,
+    /// Scripted events applied at this boundary.
+    pub events_applied: u64,
+    /// Per-server scenario liveness.
+    pub up: Vec<bool>,
+    /// Per-server committed inflight (executing + reserved in transfer),
+    /// sampled after this frame's dispatches.
+    pub inflight: Vec<usize>,
+    /// Per-server steady-state γ.
+    pub gamma: Vec<f64>,
+    /// Target server of every assignment dispatched this frame.
+    pub assigned_servers: Vec<usize>,
+}
+
+type ProbeFn = dyn Fn(&FrameProbe) + Send + Sync;
+
+/// Outcome tags for the scenario-phase log (arrival time, tag).
+const OUTCOME_DROPPED: u8 = 0;
+const OUTCOME_SERVED: u8 = 1;
+const OUTCOME_SATISFIED: u8 = 2;
+
+/// Arrival-process state shared between the leader (writer, at frame
+/// boundaries) and the generator thread (reader, per arrival): scenario
+/// mobility re-weights the covering-edge draw and `LoadBurst` windows
+/// scale the Poisson rate. Burst fields are f64 bit patterns in atomics
+/// so the generator never takes a lock on the arrival hot path for them.
+struct ArrivalShared {
+    weights: Mutex<Vec<f64>>,
+    burst_mult_bits: AtomicU64,
+    burst_until_bits: AtomicU64,
+}
+
+/// Every site that accounts a dropped request funnels through this sink,
+/// so metrics, the per-reason obs counters, the drop trace markers, the
+/// phase log, and the run-termination counter can never drift apart.
+struct DropSink {
+    metrics: Arc<Mutex<ServingMetrics>>,
+    finished: Arc<AtomicUsize>,
+    recorder: Option<Arc<Recorder>>,
+    /// `(arrival_ms, outcome tag)` log for phase segmentation; None for
+    /// unscripted runs.
+    outcomes: Option<Arc<Mutex<Vec<(f64, u8)>>>>,
+}
+
+impl DropSink {
+    fn record(&self, reason: DropReason, track: u32, at_ms: f64, arrival_ms: f64, id: u64) {
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.add_drop(reason);
+        }
+        if let Some(o) = &self.outcomes {
+            o.lock().unwrap().push((arrival_ms, OUTCOME_DROPPED));
+        }
+        if let Some(r) = &self.recorder {
+            r.add_labeled("edgeus_serve_dropped_total", "reason", reason.as_str(), 1.0);
+            r.instant("serve", "drop", PID_VIRTUAL, track, at_ms, reason.as_str(), id);
+        }
+        self.finished.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// Split the run's outcome log into scenario phases: one phase per
+/// applied event (same-boundary events coalesce into one `a+b` phase),
+/// plus the `start` prefix. Requests are assigned by arrival time, so
+/// the phases partition the run exactly.
+fn segment_phases(applied: &[(f64, &'static str)], outcomes: &[(f64, u8)]) -> Vec<PhaseMetrics> {
+    let mut phases =
+        vec![PhaseMetrics { label: "start".to_string(), from_ms: 0.0, ..Default::default() }];
+    for (t, label) in applied {
+        let same_boundary = phases.last().map(|p| p.from_ms == *t).unwrap_or(false);
+        if same_boundary {
+            if let Some(last) = phases.last_mut() {
+                last.label.push('+');
+                last.label.push_str(label);
+            }
+        } else {
+            phases.push(PhaseMetrics {
+                label: (*label).to_string(),
+                from_ms: *t,
+                ..Default::default()
+            });
+        }
+    }
+    for (arrival, kind) in outcomes {
+        let idx = phases.iter().rposition(|p| p.from_ms <= *arrival).unwrap_or(0);
+        let p = &mut phases[idx];
+        p.requests += 1;
+        match *kind {
+            OUTCOME_DROPPED => p.dropped += 1,
+            OUTCOME_SERVED => p.served += 1,
+            _ => {
+                p.served += 1;
+                p.satisfied += 1;
+            }
+        }
+    }
+    phases
+}
+
 /// The assembled serving system.
 pub struct ServingSystem {
     cfg: ServingConfig,
     manifest: Manifest,
     tiers: Vec<String>,
     recorder: Option<Arc<Recorder>>,
+    probe: Option<Arc<ProbeFn>>,
 }
 
 impl ServingSystem {
     pub fn new(cfg: ServingConfig) -> Result<ServingSystem> {
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let manifest = if cfg.synthetic {
+            Manifest::synthetic()
+        } else {
+            Manifest::load(&cfg.artifacts_dir)?
+        };
         let tiers = manifest.tiers();
         for t in cfg.edge_tiers.iter().chain(cfg.cloud_tiers.iter()) {
             if !tiers.contains(t) {
                 anyhow::bail!("tier {t} not in manifest (has {tiers:?})");
             }
         }
-        Ok(ServingSystem { cfg, manifest, tiers, recorder: None })
+        if let Some(script) = &cfg.script {
+            // Gate the script against *this* world's shape (the CLI runs
+            // the same check with byte offsets; this covers library and
+            // test callers). Horizon = arrival window + one deadline: the
+            // tail where late arrivals can still observe an event.
+            let shape = crate::verify::WorldShape {
+                num_servers: cfg.num_edge + 1,
+                num_edges: cfg.num_edge,
+                num_services: 1,
+                num_tiers: tiers.len(),
+            };
+            let d = crate::verify::verify_script(
+                script,
+                &shape,
+                Some(cfg.window_ms + cfg.deadline_ms),
+            );
+            if d.has_errors() {
+                anyhow::bail!(
+                    "scenario script rejected for this serving world:\n{}",
+                    d.render_text()
+                );
+            }
+        }
+        Ok(ServingSystem { cfg, manifest, tiers, recorder: None, probe: None })
     }
 
     /// Attach an observability recorder; a disabled one is free.
     pub fn with_recorder(mut self, recorder: Arc<Recorder>) -> ServingSystem {
         self.recorder = Some(recorder);
+        self
+    }
+
+    /// Attach a per-frame probe, called after each fired frame's scenario
+    /// advance + dispatch (test hook; see [`FrameProbe`]).
+    pub fn with_probe(mut self, probe: Arc<ProbeFn>) -> ServingSystem {
+        self.probe = Some(probe);
         self
     }
 
@@ -215,7 +371,7 @@ impl ServingSystem {
             .with_context(|| format!("unknown scheduler {}", cfg.scheduler))?;
         let clock = SimClock::new(cfg.time_scale);
         let catalog = self.catalog();
-        let placement = self.placement();
+        let mut placement = self.placement();
         let cloud_id = cfg.num_edge; // last server
         let num_servers = cfg.num_edge + 1;
 
@@ -229,9 +385,59 @@ impl ServingSystem {
         }
         let wall_t0 = std::time::Instant::now();
 
+        // Network links + bandwidth estimator (edge↔cloud path).
+        let edge_cloud_link = Link::edge_cloud_default();
+        let edge_edge_link = Link::edge_edge_default();
+        let mut estimator = BandwidthEstimator::new(600.0);
+
+        // The persistent live world. Unlike the pre-scenario runtime —
+        // which rebuilt a throwaway `Topology` (fresh `Vec<Vec<f64>>` comm
+        // matrix and all) every frame — the topology lives across the
+        // whole run: γ/η hold the steady-state capacities (per-frame
+        // residuals ride the instance's side slice), the comm matrix is
+        // the flattened row-major `Topology::comm_ms` buffer updated in
+        // place, and scenario events mutate servers/links/placement
+        // through the generation-bumping mutators so the GUS rank cache
+        // invalidates exactly the touched classes.
+        let mean_payload = 14_000u64;
+        let cloud_ms0 =
+            estimator.expected_delay_ms(mean_payload) + edge_cloud_link.propagation_ms;
+        let edge_ms0 = edge_edge_link.expected_delay_ms(mean_payload);
+        let mut servers = Vec::with_capacity(num_servers);
+        let mut comm0 = vec![vec![0.0; num_servers]; num_servers];
+        for j in 0..num_servers {
+            let class =
+                if j == cloud_id { ServerClass::Cloud } else { ServerClass::EDGE_CLASSES[j % 3] };
+            let gamma = if j == cloud_id { cfg.gamma_cloud } else { cfg.gamma_edge } as f64;
+            let eta = if j == cloud_id { cfg.eta_cloud } else { cfg.eta_edge };
+            servers.push(Server::new(j, class).with_capacities(gamma, eta));
+            for b in 0..num_servers {
+                if j != b {
+                    comm0[j][b] = if j == cloud_id || b == cloud_id { cloud_ms0 } else { edge_ms0 };
+                }
+            }
+        }
+        let mut topology = Topology::explicit(servers, comm0);
+        let mut engine = cfg
+            .script
+            .as_ref()
+            .map(|s| ScenarioEngine::new(s.clone(), &topology, 1, self.tiers.len()));
+        let scripted = engine.is_some();
+
         // Metrics plumbing.
         let metrics = Arc::new(Mutex::new(ServingMetrics::default()));
         let finished = Arc::new(AtomicUsize::new(0));
+        let outcomes: Option<Arc<Mutex<Vec<(f64, u8)>>>> = if scripted {
+            Some(Arc::new(Mutex::new(Vec::with_capacity(cfg.total_requests))))
+        } else {
+            None
+        };
+        let sink = Arc::new(DropSink {
+            metrics: Arc::clone(&metrics),
+            finished: Arc::clone(&finished),
+            recorder: recorder.clone(),
+            outcomes: outcomes.clone(),
+        });
         let (completion_tx, completion_rx) = channel::<(Completion, f64, f64)>();
 
         // Collector thread: scores Def. II.1 satisfaction per completion.
@@ -239,6 +445,7 @@ impl ServingSystem {
             let metrics = Arc::clone(&metrics);
             let finished = Arc::clone(&finished);
             let recorder = recorder.clone();
+            let outcomes = outcomes.clone();
             std::thread::spawn(move || {
                 while let Ok((c, a_min, c_max)) = completion_rx.recv() {
                     let ok = c.accuracy_pct >= a_min && c.completion_ms <= c_max;
@@ -260,6 +467,12 @@ impl ServingSystem {
                     m.latency.record(c.completion_ms);
                     m.inference.record(c.inference_real_ms.max(1e-3));
                     drop(m);
+                    if let Some(o) = &outcomes {
+                        o.lock().unwrap().push((
+                            c.arrival_sim_ms,
+                            if ok { OUTCOME_SATISFIED } else { OUTCOME_SERVED },
+                        ));
+                    }
                     if let Some(r) = &recorder {
                         // Full lifecycle span: arrival → reply, in sim time.
                         let track = match kind {
@@ -302,27 +515,37 @@ impl ServingSystem {
         };
 
         // Spawn server nodes (edges cycle through classes, like the sim).
+        // Scripts with placement churn make every node load the full tier
+        // ladder, so a tier placed mid-run can actually execute.
+        let script_has_placement = cfg
+            .script
+            .as_ref()
+            .map(|s| s.events.iter().any(|e| matches!(e.kind, EventKind::PlacementChange { .. })))
+            .unwrap_or(false);
+        let spawn_node = |id: usize, class: ServerClass, tiers: Vec<String>, gamma: usize| {
+            let engine = if cfg.synthetic {
+                InferenceHandle::spawn_synthetic(self.manifest.num_classes, gamma.min(4))?
+            } else {
+                InferenceHandle::spawn_pool(&cfg.artifacts_dir, tiers.clone(), gamma.min(4))?
+            };
+            ServerNode::spawn_with_engine(id, class, tiers, engine, gamma, clock, node_tx.clone())
+        };
         let mut nodes: Vec<Arc<ServerNode>> = Vec::new();
         for e in 0..cfg.num_edge {
-            let class = ServerClass::EDGE_CLASSES[e % 3];
-            nodes.push(Arc::new(ServerNode::spawn(
+            let tiers =
+                if script_has_placement { self.tiers.clone() } else { cfg.edge_tiers.clone() };
+            nodes.push(Arc::new(spawn_node(
                 e,
-                class,
-                &cfg.artifacts_dir,
-                cfg.edge_tiers.clone(),
+                ServerClass::EDGE_CLASSES[e % 3],
+                tiers,
                 cfg.gamma_edge,
-                clock,
-                node_tx.clone(),
             )?));
         }
-        nodes.push(Arc::new(ServerNode::spawn(
+        nodes.push(Arc::new(spawn_node(
             cloud_id,
             ServerClass::Cloud,
-            &cfg.artifacts_dir,
             self.cloud_tier_names(),
             cfg.gamma_cloud,
-            clock,
-            node_tx.clone(),
         )?));
         drop(node_tx);
 
@@ -331,16 +554,24 @@ impl ServingSystem {
             .map(|_| Arc::new(Mutex::new(AdmissionQueue::new(cfg.queue_capacity))))
             .collect();
 
+        // Arrival-process state the scenario engine steers (weights start
+        // uniform, no burst).
+        let arrivals = Arc::new(ArrivalShared {
+            weights: Mutex::new(vec![1.0; cfg.num_edge]),
+            burst_mult_bits: AtomicU64::new(1.0f64.to_bits()),
+            burst_until_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        });
+
         // Request generator.
         let generated = Arc::new(AtomicU64::new(0));
         let image_len = self.manifest.image_size * self.manifest.image_size
             * self.manifest.image_channels;
         let generator = {
             let queues: Vec<_> = queues.iter().map(Arc::clone).collect();
-            let metrics = Arc::clone(&metrics);
-            let finished = Arc::clone(&finished);
             let generated = Arc::clone(&generated);
             let recorder = recorder.clone();
+            let sink = Arc::clone(&sink);
+            let arrivals = Arc::clone(&arrivals);
             let total = cfg.total_requests;
             let window = cfg.window_ms;
             let seed = cfg.seed;
@@ -349,9 +580,29 @@ impl ServingSystem {
                 let mean_gap = window / total.max(1) as f64;
                 for id in 0..total as u64 {
                     // Poisson arrivals: exponential inter-arrival gaps.
-                    let gap = -mean_gap * (1.0 - rng.f64()).ln();
+                    // Scripted runs scale the rate by the live burst
+                    // window and draw the covering edge from the
+                    // scenario's mobility/outage-masked weights; plain
+                    // runs keep the legacy uniform draw stream.
+                    let gap = if scripted {
+                        let until =
+                            f64::from_bits(arrivals.burst_until_bits.load(Ordering::SeqCst));
+                        let mult = if clock.now_ms() < until {
+                            f64::from_bits(arrivals.burst_mult_bits.load(Ordering::SeqCst))
+                        } else {
+                            1.0
+                        };
+                        -(mean_gap / mult) * (1.0 - rng.f64()).ln()
+                    } else {
+                        -mean_gap * (1.0 - rng.f64()).ln()
+                    };
                     clock.sleep_ms(gap.min(mean_gap * 10.0));
-                    let edge = rng.index(queues.len());
+                    let edge = if scripted {
+                        let w = arrivals.weights.lock().unwrap();
+                        pick_weighted(&w, &mut rng)
+                    } else {
+                        rng.index(queues.len())
+                    };
                     let images: Vec<f32> = (0..image_len).map(|_| rng.f64() as f32).collect();
                     let req = ServeRequest {
                         id,
@@ -368,37 +619,13 @@ impl ServingSystem {
                     }
                     if !admitted {
                         // Bounded admission queue rejection: the only drop
-                        // site outside the scheduler's decision.
-                        let mut m = metrics.lock().unwrap();
-                        m.add_drop(DropReason::QueueFull);
-                        drop(m);
-                        if let Some(r) = &recorder {
-                            r.add_labeled(
-                                "edgeus_serve_dropped_total",
-                                "reason",
-                                DropReason::QueueFull.as_str(),
-                                1.0,
-                            );
-                            r.instant(
-                                "serve",
-                                "drop",
-                                PID_VIRTUAL,
-                                edge as u32,
-                                arrival_sim,
-                                DropReason::QueueFull.as_str(),
-                                id,
-                            );
-                        }
-                        finished.fetch_add(1, Ordering::SeqCst);
+                        // site outside the scheduler's decision and the
+                        // mid-transfer outage fallback.
+                        sink.record(DropReason::QueueFull, edge as u32, arrival_sim, arrival_sim, id);
                     }
                 }
             })
         };
-
-        // Network links + bandwidth estimator (edge↔cloud path).
-        let edge_cloud_link = Link::edge_cloud_default();
-        let edge_edge_link = Link::edge_edge_default();
-        let mut estimator = BandwidthEstimator::new(600.0);
 
         // Leader loop: decision frames. Scheduler working memory and the
         // schedule output live outside the loop so steady-state frames
@@ -408,6 +635,9 @@ impl ServingSystem {
         let mut leader_rng = Rng::new(cfg.seed ^ 0xD15BA7C4);
         let mut sched_scratch = SchedScratch::default();
         let mut schedule = Schedule::empty(0);
+        let mut residual = vec![0.0f64; num_servers];
+        let mut last_backhaul_drift = 1.0f64;
+        let mut peer_drift = 1.0f64;
         let real_tick = std::time::Duration::from_secs_f64(
             (cfg.frame_ms / cfg.time_scale / 1e3 / 20.0).max(0.0005),
         );
@@ -421,10 +651,61 @@ impl ServingSystem {
             let now = clock.now_ms();
             let any_full = queues.iter().any(|q| q.lock().unwrap().is_full());
             let any_waiting = queues.iter().any(|q| !q.lock().unwrap().is_empty());
-            if !frame.should_fire(now, any_full) || !any_waiting {
+            if !frame.should_fire(now, any_full) {
+                continue;
+            }
+            // Scripted runs fire every boundary (events apply on time even
+            // through lulls — the DES cadence); plain runs keep the lazy
+            // legacy cadence and only fire with work waiting.
+            if engine.is_none() && !any_waiting {
                 continue;
             }
             frame.fired(now);
+
+            // Scenario advance: same application point as the DES decide
+            // loop — events land at the frame boundary, before this
+            // frame's world snapshot is taken.
+            let mut events_applied = 0u64;
+            if let Some(eng) = engine.as_mut() {
+                events_applied =
+                    eng.advance_traced(now, &mut topology, &mut placement, recorder.as_deref());
+                if events_applied > 0 {
+                    // Outages → node dispatch gates (mid-transfer work
+                    // redirects; executing jobs drain to completion).
+                    for (j, node) in nodes.iter().enumerate() {
+                        node.set_up(topology.servers[j].up);
+                    }
+                    // Mobility / outage masking → generator edge weights;
+                    // bursts → generator rate window.
+                    {
+                        let mut w = arrivals.weights.lock().unwrap();
+                        eng.edge_weights_into(&topology, &mut w);
+                    }
+                    let (mult, until) = eng.burst_window();
+                    arrivals.burst_mult_bits.store(mult.to_bits(), Ordering::SeqCst);
+                    arrivals.burst_until_bits.store(until.to_bits(), Ordering::SeqCst);
+                    // Backhaul drift biases the paper's bandwidth
+                    // estimator: both of its samples jump to the drifted
+                    // channel, exactly as the DES's comm matrix jumps.
+                    let drift = eng.backhaul_drift();
+                    if drift != last_backhaul_drift {
+                        let biased = edge_cloud_link.mean_bytes_per_ms / drift;
+                        estimator.observe(biased);
+                        estimator.observe(biased);
+                        last_backhaul_drift = drift;
+                    }
+                    peer_drift = eng.peer_drift();
+                    if let Some(r) = &recorder {
+                        r.sample(
+                            "edgeus_serve_live_servers",
+                            PID_VIRTUAL,
+                            0,
+                            now,
+                            topology.servers.iter().filter(|s| s.up).count() as f64,
+                        );
+                    }
+                }
+            }
 
             // Drain all queues into one joint decision problem.
             let mut pending: Vec<(usize, ServeRequest, f64)> = Vec::new();
@@ -434,33 +715,43 @@ impl ServingSystem {
                 }
             }
             if pending.is_empty() {
+                if let Some(probe) = &self.probe {
+                    probe(&FrameProbe {
+                        now_ms: now,
+                        events_applied,
+                        up: topology.servers.iter().map(|s| s.up).collect(),
+                        inflight: nodes.iter().map(|n| n.inflight()).collect(),
+                        gamma: topology.servers.iter().map(|s| s.gamma).collect(),
+                        assigned_servers: Vec::new(),
+                    });
+                }
                 continue;
             }
 
-            // Build the scheduler's instance with residual capacities.
-            let mut servers = Vec::with_capacity(num_servers);
-            for (j, node) in nodes.iter().enumerate() {
-                let base_gamma =
-                    if j == cloud_id { cfg.gamma_cloud } else { cfg.gamma_edge } as f64;
-                let free = (base_gamma - node.inflight() as f64).max(0.0);
-                let eta = if j == cloud_id { cfg.eta_cloud } else { cfg.eta_edge };
-                servers.push(Server::new(j, node.class).with_capacities(free, eta));
-            }
-            // Comm matrix from the current bandwidth estimate.
-            let mean_payload = 14_000u64;
-            let cloud_ms = estimator.expected_delay_ms(mean_payload) + edge_cloud_link.propagation_ms;
-            let edge_ms = edge_edge_link.expected_delay_ms(mean_payload);
-            let mut comm = vec![vec![0.0; num_servers]; num_servers];
+            // lint:no-alloc:begin — steady-state world refresh. The comm
+            // matrix is the persistent topology's flattened row-major
+            // buffer written in place (guarded, so unchanged rows don't
+            // invalidate rank-cache classes), and the residual-γ slice is
+            // a pooled buffer — no per-frame Vec<Vec<f64>> rebuilds.
+            let cloud_ms =
+                estimator.expected_delay_ms(mean_payload) + edge_cloud_link.propagation_ms;
+            let edge_ms = edge_edge_link.expected_delay_ms(mean_payload) * peer_drift;
             for a in 0..num_servers {
                 for b in 0..num_servers {
                     if a == b {
                         continue;
                     }
-                    comm[a][b] =
-                        if a == cloud_id || b == cloud_id { cloud_ms } else { edge_ms };
+                    let want = if a == cloud_id || b == cloud_id { cloud_ms } else { edge_ms };
+                    if topology.comm_ms(ServerId(a), ServerId(b)) != want {
+                        topology.set_comm_ms(ServerId(a), ServerId(b), want);
+                    }
                 }
             }
-            let topology = Topology::explicit(servers, comm);
+            for (j, node) in nodes.iter().enumerate() {
+                residual[j] = (topology.servers[j].gamma - node.inflight() as f64).max(0.0);
+            }
+            // lint:no-alloc:end
+
             let requests: Vec<Request> = pending
                 .iter()
                 .enumerate()
@@ -471,16 +762,11 @@ impl ServingSystem {
                         .with_payload(req.payload_bytes)
                 })
                 .collect();
-            // The topology is rebuilt each frame (capacities move), but
-            // the catalog and placement are borrowed — no per-frame
-            // deep clone of the service profiles.
-            let inst = ProblemInstance::from_parts(
-                std::borrow::Cow::Owned(topology),
-                std::borrow::Cow::Borrowed(&catalog),
-                std::borrow::Cow::Borrowed(&placement),
-                requests,
-            )
-            .with_normalization(100.0, 12_000.0);
+            // Borrow the persistent world; the per-frame residual γ rides
+            // the side slice (same shape as the DES hot path).
+            let inst = ProblemInstance::borrowed(&topology, &catalog, &placement, requests)
+                .with_normalization(100.0, 12_000.0)
+                .with_residual_gamma(std::mem::take(&mut residual));
             let sched_w0 =
                 recorder.as_ref().map(|_| wall_t0.elapsed().as_secs_f64() * 1e3);
             scheduler.schedule_into(&inst, &mut leader_rng, &mut sched_scratch, &mut schedule);
@@ -491,13 +777,19 @@ impl ServingSystem {
                 r.sample("edgeus_serve_frame_requests", PID_VIRTUAL, 0, now, inst.requests.len() as f64);
             }
             // Post-hoc decision explanation: needed for the trace and to
-            // classify scheduler-rejected requests by drop reason.
+            // classify scheduler-rejected requests by drop reason (a
+            // request whose only viable targets are down counts as a
+            // server-down drop, not a policy choice).
             let needs_explain =
                 recorder.is_some() || schedule.slots.iter().any(|s| s.is_none());
             let explain = if needs_explain { Some(explain_schedule(&inst, &schedule)) } else { None };
             if let (Some(r), Some(ex)) = (&recorder, &explain) {
                 r.add("edgeus_serve_candidates_total", ex.candidates_considered as f64);
             }
+            // Hand the pooled residual buffer back for the next frame.
+            let (_reqs, res) = inst.into_buffers();
+            residual = res.unwrap_or_default();
+            residual.resize(num_servers, 0.0);
 
             // Dispatch.
             for (i, (e, req, _tq)) in pending.into_iter().enumerate() {
@@ -510,43 +802,41 @@ impl ServingSystem {
                                 _ => DropReason::Policy,
                             })
                             .unwrap_or(DropReason::Policy);
-                        let mut m = metrics.lock().unwrap();
-                        m.add_drop(reason);
-                        drop(m);
-                        if let Some(r) = &recorder {
-                            r.add_labeled(
-                                "edgeus_serve_dropped_total",
-                                "reason",
-                                reason.as_str(),
-                                1.0,
-                            );
-                            r.instant(
-                                "serve",
-                                "drop",
-                                PID_VIRTUAL,
-                                e as u32,
-                                now,
-                                reason.as_str(),
-                                req.id,
-                            );
-                        }
-                        finished.fetch_add(1, Ordering::SeqCst);
+                        sink.record(reason, e as u32, now, req.arrival_sim_ms, req.id);
                     }
                     Some(a) => {
                         self.dispatch(
                             a,
                             req,
+                            e,
                             &nodes,
                             cloud_id,
                             clock,
                             &edge_cloud_link,
                             &edge_edge_link,
+                            (last_backhaul_drift, peer_drift),
                             &mut estimator,
                             &mut leader_rng,
+                            &sink,
                             &mut dispatch_threads,
                         );
                     }
                 }
+            }
+            if let Some(probe) = &self.probe {
+                probe(&FrameProbe {
+                    now_ms: now,
+                    events_applied,
+                    up: topology.servers.iter().map(|s| s.up).collect(),
+                    inflight: nodes.iter().map(|n| n.inflight()).collect(),
+                    gamma: topology.servers.iter().map(|s| s.gamma).collect(),
+                    assigned_servers: schedule
+                        .slots
+                        .iter()
+                        .flatten()
+                        .map(|a| a.candidate.server.0)
+                        .collect(),
+                });
             }
             // Reap finished transfer threads opportunistically.
             dispatch_threads.retain(|h| !h.is_finished());
@@ -572,7 +862,15 @@ impl ServingSystem {
             .unwrap_or_else(|arc| arc.lock().unwrap().clone());
         m.total_requests = cfg.total_requests as u64;
         m.wall_ms = clock.now_ms();
-        // Every generated request must be accounted for exactly once.
+        if let Some(eng) = &engine {
+            let log = outcomes
+                .as_ref()
+                .map(|o| o.lock().unwrap().clone())
+                .unwrap_or_default();
+            m.phases = segment_phases(eng.applied_events(), &log);
+        }
+        // Every generated request must be accounted for exactly once —
+        // overall and within every scenario phase.
         m.check_conservation().map_err(anyhow::Error::msg)?;
         Ok(m)
     }
@@ -582,28 +880,29 @@ impl ServingSystem {
         &self,
         a: &Assignment,
         req: ServeRequest,
+        covering_edge: usize,
         nodes: &[Arc<ServerNode>],
         cloud_id: usize,
         clock: SimClock,
         edge_cloud_link: &Link,
         edge_edge_link: &Link,
+        (backhaul_drift, peer_drift): (f64, f64),
         estimator: &mut BandwidthEstimator,
         rng: &mut Rng,
+        sink: &Arc<DropSink>,
         transfers: &mut Vec<std::thread::JoinHandle<()>>,
     ) {
         let tier_name = self.tiers[a.candidate.tier.0].clone();
         let target = Arc::clone(&nodes[a.candidate.server.0]);
-        let profile_proc = {
-            let class = target.class;
+        let slow = self.cfg.tier_slowdown.powi(a.candidate.tier.0 as i32);
+        let profile_proc = if target.class.is_cloud() {
+            self.cfg.cloud_proc_base_ms * slow
+        } else {
             // Same calibration as `catalog()`.
-            let slow = self.cfg.tier_slowdown.powi(a.candidate.tier.0 as i32);
-            if class.is_cloud() {
-                self.cfg.cloud_proc_base_ms * slow
-            } else {
-                let speed = [1.15, 1.0, 0.85][class.index()];
-                self.cfg.edge_proc_base_ms * slow * speed
-            }
+            let speed = [1.15, 1.0, 0.85][target.class.index()];
+            self.cfg.edge_proc_base_ms * slow * speed
         };
+        let payload = req.payload_bytes;
         let job = ExecJob {
             request_id: req.id,
             arrival_sim_ms: req.arrival_sim_ms,
@@ -614,17 +913,51 @@ impl ServingSystem {
             served_local: !a.candidate.offloaded,
         };
         if !a.candidate.offloaded {
+            // Local execution: the leader applied scenario events on this
+            // same thread, so an up target cannot flip before submit.
             target.submit(job);
             return;
         }
-        // Offload: sample the real link, feed the estimator, and forward
-        // after the (scaled) transfer delay.
-        let link = if a.candidate.server.0 == cloud_id { edge_cloud_link } else { edge_edge_link };
-        let (delay_ms, realized_bw) = link.transfer(req.payload_bytes, rng);
-        if a.candidate.server.0 == cloud_id {
-            estimator.observe(realized_bw);
+        // Offload: sample the real link (scaled by any scenario drift),
+        // feed the estimator the *observed* drifted channel, and forward
+        // after the transfer delay.
+        let to_cloud = a.candidate.server.0 == cloud_id;
+        let (link, drift) =
+            if to_cloud { (edge_cloud_link, backhaul_drift) } else { (edge_edge_link, peer_drift) };
+        let (raw_delay, raw_bw) = link.transfer(payload, rng);
+        let delay_ms = (raw_delay - link.propagation_ms) * drift + link.propagation_ms;
+        if to_cloud {
+            estimator.observe(raw_bw / backhaul_drift);
         }
-        if let Some(r) = self.recorder.as_deref().filter(|r| r.is_enabled()) {
+        // The inflight slot is reserved *now*, so the next frame's
+        // residual γ already counts work still crossing the link. If the
+        // target dies mid-transfer, the covering edge re-forwards to the
+        // cloud when it is live with a free slot; otherwise the request
+        // is a server-down casualty.
+        //
+        // Edges only ever take commitments from this (leader) thread, so a
+        // plain reservation stays within the residual-γ the scheduler saw.
+        // The cloud also absorbs concurrent mid-transfer redirects: bound
+        // its reservation by γ so committed inflight can never overshoot
+        // even when a redirect lands between the residual snapshot and
+        // this dispatch.
+        let gamma_cloud = self.cfg.gamma_cloud;
+        let track = covering_edge as u32;
+        if to_cloud {
+            if !target.try_reserve(gamma_cloud) {
+                sink.record(
+                    DropReason::CapacityExhausted,
+                    track,
+                    clock.now_ms(),
+                    job.arrival_sim_ms,
+                    job.request_id,
+                );
+                return;
+            }
+        } else {
+            target.reserve();
+        }
+        if let Some(r) = &sink.recorder {
             r.span(
                 "serve",
                 "transfer",
@@ -636,9 +969,47 @@ impl ServingSystem {
             );
             r.add("edgeus_serve_transfers_total", 1.0);
         }
+        let cloud = Arc::clone(&nodes[cloud_id]);
+        let redirect_proc_ms = self.cfg.cloud_proc_base_ms * slow;
+        let redirect_delay_ms = (edge_cloud_link.expected_delay_ms(payload)
+            - edge_cloud_link.propagation_ms)
+            * backhaul_drift
+            + edge_cloud_link.propagation_ms;
+        let sink = Arc::clone(sink);
         transfers.push(std::thread::spawn(move || {
             clock.sleep_ms(delay_ms);
-            target.submit(job);
+            if target.is_up() {
+                target.submit_reserved(job);
+                return;
+            }
+            target.release();
+            let mut job = job;
+            if !to_cloud && cloud.is_up() && cloud.try_reserve(gamma_cloud) {
+                job.proc_ms = redirect_proc_ms;
+                job.served_local = false;
+                if let Some(r) = &sink.recorder {
+                    r.add("edgeus_serve_redirects_total", 1.0);
+                    r.instant(
+                        "serve",
+                        "redirect",
+                        PID_VIRTUAL,
+                        track,
+                        clock.now_ms(),
+                        "",
+                        job.request_id,
+                    );
+                }
+                clock.sleep_ms(redirect_delay_ms);
+                cloud.submit_reserved(job);
+            } else {
+                sink.record(
+                    DropReason::ServerDown,
+                    track,
+                    clock.now_ms(),
+                    job.arrival_sim_ms,
+                    job.request_id,
+                );
+            }
         }));
     }
 }
@@ -734,8 +1105,59 @@ mod tests {
         assert_eq!(c.min_accuracy_pct, 50.0);
         assert_eq!(c.edge_proc_base_ms, 1300.0);
         assert_eq!(c.cloud_proc_base_ms, 300.0);
+        assert!(c.script.is_none());
+        assert!(!c.synthetic);
     }
 
-    // Full-system tests live in rust/tests/serving_e2e.rs (they need the
-    // compiled artifacts).
+    #[test]
+    fn synthetic_system_builds_without_artifacts() {
+        let cfg = ServingConfig { synthetic: true, ..ServingConfig::default() };
+        let sys = ServingSystem::new(cfg).unwrap();
+        assert_eq!(sys.tiers, vec!["tiny", "small", "base"]);
+    }
+
+    #[test]
+    fn out_of_shape_script_is_rejected_at_build() {
+        // Server 5 exists in the paper world but not in a 2-edge serving
+        // config (3 servers): building the system must fail loudly.
+        let script = Script::new(
+            "oob",
+            vec![crate::scenario::ScriptedEvent {
+                at_ms: 1000.0,
+                kind: EventKind::ServerDown { server: 5 },
+            }],
+        );
+        let cfg =
+            ServingConfig { synthetic: true, script: Some(script), ..ServingConfig::default() };
+        let err = ServingSystem::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("E001"), "{err}");
+    }
+
+    #[test]
+    fn phase_segmentation_partitions_and_coalesces() {
+        let applied = [(9000.0, "server_down"), (9000.0, "load_burst"), (30_000.0, "server_up")];
+        let outcomes = [
+            (100.0, OUTCOME_SATISFIED),
+            (8999.0, OUTCOME_DROPPED),
+            (9000.0, OUTCOME_SERVED),
+            (29_000.0, OUTCOME_SATISFIED),
+            (31_000.0, OUTCOME_DROPPED),
+        ];
+        let phases = segment_phases(&applied, &outcomes);
+        let labels: Vec<&str> = phases.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["start", "server_down+load_burst", "server_up"]);
+        assert_eq!(phases[0].requests, 2);
+        assert_eq!(phases[0].satisfied, 1);
+        assert_eq!(phases[0].dropped, 1);
+        assert_eq!(phases[1].requests, 2);
+        assert_eq!(phases[1].served, 2);
+        assert_eq!(phases[1].satisfied, 1);
+        assert_eq!(phases[2].requests, 1);
+        assert_eq!(phases[2].dropped, 1);
+        let req: u64 = phases.iter().map(|p| p.requests).sum();
+        assert_eq!(req, outcomes.len() as u64);
+    }
+
+    // Full-system tests live in rust/tests/serving_e2e.rs (artifacts
+    // path) and rust/tests/serve_scenario_parity.rs (synthetic path).
 }

@@ -6,7 +6,7 @@
 use crate::model::server::ServerClass;
 use crate::runtime::InferenceEngine;
 use crate::serving::clock::SimClock;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -102,6 +102,40 @@ impl InferenceHandle {
         Ok(InferenceHandle { tx, joins })
     }
 
+    /// Spawn `n` mock engine threads that answer every job instantly with
+    /// canned logits — the `--synthetic` serving mode. Keeps the full
+    /// thread/channel topology of the real path (jobs still cross the
+    /// engine queue) so scenario replay, parity tests, and CI smoke runs
+    /// exercise the real concurrency structure without compiled
+    /// artifacts or a PJRT backend.
+    pub fn spawn_synthetic(num_classes: usize, n: usize) -> anyhow::Result<InferenceHandle> {
+        assert!(n > 0);
+        let (tx, rx): (Sender<InferJob>, Receiver<InferJob>) = channel();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let mut joins = Vec::with_capacity(n);
+        for t in 0..n {
+            let rx = Arc::clone(&shared_rx);
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("mock-engine{t}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { break };
+                        let _ = job.reply.send(Ok(crate::runtime::InferenceResult {
+                            logits: vec![0.0; num_classes],
+                            batch: 1,
+                            num_classes,
+                            execute_ms: 0.0,
+                        }));
+                    })?,
+            );
+        }
+        Ok(InferenceHandle { tx, joins })
+    }
+
     /// Run one image synchronously through the node's engine.
     pub fn infer(
         &self,
@@ -170,7 +204,12 @@ pub struct ServerNode {
     pub tiers: Vec<String>,
     job_tx: Sender<ExecJob>,
     /// Jobs admitted but not yet completed (executor queue + in service).
+    /// Includes dispatch reservations (see [`ServerNode::reserve`]) so the
+    /// leader's residual-γ view already counts work still in transfer.
     inflight: Arc<AtomicUsize>,
+    /// Scenario availability: a down node stays running (jobs already in
+    /// service finish) but receives no new dispatches.
+    up: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
     _engine: InferenceHandle,
 }
@@ -192,6 +231,22 @@ impl ServerNode {
         assert!(gamma > 0);
         let engines = gamma.min(4);
         let engine = InferenceHandle::spawn_pool(artifacts_dir, tiers.clone(), engines)?;
+        Self::spawn_with_engine(id, class, tiers, engine, gamma, clock, completions)
+    }
+
+    /// Spawn the node around an already-built engine handle (real pool or
+    /// [`InferenceHandle::spawn_synthetic`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_with_engine(
+        id: usize,
+        class: ServerClass,
+        tiers: Vec<String>,
+        engine: InferenceHandle,
+        gamma: usize,
+        clock: SimClock,
+        completions: Sender<Completion>,
+    ) -> anyhow::Result<ServerNode> {
+        assert!(gamma > 0);
         let (job_tx, job_rx) = channel::<ExecJob>();
         let shared_rx = Arc::new(Mutex::new(job_rx));
         let inflight = Arc::new(AtomicUsize::new(0));
@@ -249,12 +304,64 @@ impl ServerNode {
                     })?,
             );
         }
-        Ok(ServerNode { id, class, tiers, job_tx, inflight, workers, _engine: engine })
+        Ok(ServerNode {
+            id,
+            class,
+            tiers,
+            job_tx,
+            inflight,
+            up: Arc::new(AtomicBool::new(true)),
+            workers,
+            _engine: engine,
+        })
     }
 
     /// Enqueue a job on this node's executor pool.
     pub fn submit(&self, job: ExecJob) {
         self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.submit_reserved(job);
+    }
+
+    /// Reserve one inflight slot ahead of an asynchronous dispatch (the
+    /// job is still crossing a transfer link). Pair with
+    /// [`ServerNode::submit_reserved`] or [`ServerNode::release`]; the
+    /// reservation keeps the next frame's residual γ honest about work
+    /// already committed to this node.
+    pub fn reserve(&self) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Give back a reservation without submitting (dispatch redirected or
+    /// dropped).
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Reserve a slot only if committed inflight stays within `cap` —
+    /// the bound cloud dispatches and redirect fallbacks use so a wave
+    /// of mid-transfer failovers can never overcommit the cloud past
+    /// its γ. CAS loop (not add-then-rollback) so a concurrent reader
+    /// never observes inflight above `cap` even transiently.
+    pub fn try_reserve(&self, cap: usize) -> bool {
+        let mut cur = self.inflight.load(Ordering::SeqCst);
+        loop {
+            if cur >= cap {
+                return false;
+            }
+            match self.inflight.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Enqueue a job whose inflight slot was already reserved.
+    pub fn submit_reserved(&self, job: ExecJob) {
         if self.job_tx.send(job).is_err() {
             self.inflight.fetch_sub(1, Ordering::SeqCst);
         }
@@ -263,6 +370,15 @@ impl ServerNode {
     /// Jobs admitted but not yet finished.
     pub fn inflight(&self) -> usize {
         self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Scenario availability flag (leader-synced from the live topology).
+    pub fn is_up(&self) -> bool {
+        self.up.load(Ordering::SeqCst)
+    }
+
+    pub fn set_up(&self, up: bool) {
+        self.up.store(up, Ordering::SeqCst);
     }
 
     pub fn inflight_handle(&self) -> Arc<AtomicUsize> {

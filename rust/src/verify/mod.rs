@@ -20,7 +20,7 @@ pub mod world;
 
 pub use diag::{Code, Diagnostic, Diagnostics, Severity};
 pub use schedule::verify_schedule_doc;
-pub use script::{verify_script, verify_script_doc};
+pub use script::{event_byte_offsets, verify_script, verify_script_doc, verify_script_text};
 pub use world::{verify_scenario, DesLoad};
 
 use crate::serving::ServingConfig;
@@ -219,6 +219,19 @@ pub fn verify_serving_config(cfg: &ServingConfig) -> Diagnostics {
             ),
         );
     }
+    if let Some(script) = &cfg.script {
+        // Shape of the serving world: num_edge edges + one cloud, one
+        // service. Tier count comes from the manifest, unknown at config
+        // level — usize::MAX disables the tier-bound check here;
+        // `ServingSystem::new` re-verifies against the real ladder.
+        let shape = WorldShape {
+            num_servers: cfg.num_edge + 1,
+            num_edges: cfg.num_edge,
+            num_services: 1,
+            num_tiers: usize::MAX,
+        };
+        out.extend(verify_script(script, &shape, Some(cfg.window_ms + cfg.deadline_ms)));
+    }
     out
 }
 
@@ -268,6 +281,26 @@ mod tests {
         assert!(verify_serving_config(&cfg).has_code(Code::BadParam));
         let cfg = ServingConfig { deadline_ms: 10.0, ..ServingConfig::default() };
         assert!(verify_serving_config(&cfg).has_code(Code::DeadlineInfeasible));
+    }
+
+    #[test]
+    fn serving_config_gates_attached_scripts() {
+        use crate::scenario::{EventKind, Script, ScriptedEvent};
+        // Server 5 is valid in the paper's 10-server world but not in
+        // the default 3-server serving world (2 edges + cloud).
+        let script = Script::new(
+            "oob",
+            vec![ScriptedEvent { at_ms: 1_000.0, kind: EventKind::ServerDown { server: 5 } }],
+        );
+        let cfg = ServingConfig { script: Some(script), ..ServingConfig::default() };
+        let d = verify_serving_config(&cfg);
+        assert!(d.has_code(Code::ServerIndex), "{}", d.render_text());
+        assert!(d.has_errors());
+        // A builtin sized for the serving world passes the same gate.
+        let script = Script::builtin("edge-failover", 60_000.0, 2).unwrap();
+        let cfg = ServingConfig { script: Some(script), ..ServingConfig::default() };
+        let d = verify_serving_config(&cfg);
+        assert!(!d.has_errors(), "{}", d.render_text());
     }
 
     #[test]

@@ -117,6 +117,115 @@ pub fn verify_script(script: &Script, shape: &WorldShape, horizon_ms: Option<f64
     out
 }
 
+/// Byte offset (into `text`) of each element of the top-level
+/// `"events"` array — the anchors for `(byte N)`-located diagnostics
+/// over script *files*. Walks the raw JSON with a string-aware bracket
+/// scanner, so brackets inside strings don't confuse it. Returns an
+/// empty vec when the array can't be found (offsets are then omitted
+/// from diagnostics rather than guessed).
+pub fn event_byte_offsets(text: &str) -> Vec<usize> {
+    let bytes = text.as_bytes();
+    let Some(key) = text.find("\"events\"") else {
+        return Vec::new();
+    };
+    let mut i = key + "\"events\"".len();
+    while i < bytes.len() && bytes[i] != b'[' {
+        if !matches!(bytes[i], b' ' | b'\t' | b'\n' | b'\r' | b':') {
+            return Vec::new(); // something unexpected between key and array
+        }
+        i += 1;
+    }
+    if i >= bytes.len() {
+        return Vec::new();
+    }
+    let mut offsets = Vec::new();
+    let mut depth = 0usize; // nesting depth counted from outside events[]
+    let mut in_str = false;
+    let mut escaped = false;
+    let mut expecting_element = false;
+    for (pos, &c) in bytes.iter().enumerate().skip(i) {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == b'\\' {
+                escaped = true;
+            } else if c == b'"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            b'"' => {
+                if depth == 1 && expecting_element {
+                    offsets.push(pos);
+                    expecting_element = false;
+                }
+                in_str = true;
+            }
+            b'[' | b'{' => {
+                if depth == 1 && expecting_element {
+                    offsets.push(pos);
+                    expecting_element = false;
+                }
+                depth += 1;
+                if depth == 1 {
+                    expecting_element = true; // just entered events[]
+                }
+            }
+            b']' | b'}' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    break; // closed the events array
+                }
+            }
+            b',' => {
+                if depth == 1 {
+                    expecting_element = true;
+                }
+            }
+            b' ' | b'\t' | b'\n' | b'\r' => {}
+            _ => {
+                if depth == 1 && expecting_element {
+                    offsets.push(pos);
+                    expecting_element = false;
+                }
+            }
+        }
+    }
+    offsets
+}
+
+fn event_index(at: &str) -> Option<usize> {
+    at.strip_prefix("events[")?.strip_suffix(']')?.parse().ok()
+}
+
+/// Verify a script *file's text*: parse strictly, run [`verify_script`],
+/// and anchor every `events[i]`-located diagnostic to that element's
+/// byte offset in the source — `events[2] (byte 187)` — so a rejected
+/// `edgeus serve --script FILE.json` points into the offending file.
+pub fn verify_script_text(
+    text: &str,
+    shape: &WorldShape,
+    horizon_ms: Option<f64>,
+) -> Diagnostics {
+    let mut out = Diagnostics::new();
+    let script = match Script::parse(text) {
+        Ok(s) => s,
+        Err(e) => {
+            out.push(Code::ParseError, "events", format!("{e:#}"));
+            return out;
+        }
+    };
+    let offsets = event_byte_offsets(text);
+    for d in verify_script(&script, shape, horizon_ms).sorted() {
+        match event_index(&d.at).and_then(|i| offsets.get(i)) {
+            Some(b) => out.push(d.code, format!("{} (byte {b})", d.at), d.message.clone()),
+            None => out.push(d.code, &d.at, d.message.clone()),
+        }
+    }
+    out
+}
+
 /// Verify a script *document* (already-parsed JSON). Structural issues
 /// the strict parser would reject (unknown type/field, missing keys)
 /// become diagnostics here instead of hard errors, so `edgeus verify`
@@ -249,5 +358,42 @@ mod tests {
         let d = verify_script(&Script::new("x", vec![]), &shape(), None);
         assert!(d.has_code(Code::EmptyScript));
         assert!(!d.has_errors());
+    }
+
+    #[test]
+    fn text_diagnostics_carry_byte_offsets() {
+        let text = r#"{"name":"oob","events":[
+            {"at_ms": 1000, "type": "server_down", "server": 1},
+            {"at_ms": 2000, "type": "server_down", "server": 9},
+            {"at_ms": 3000, "type": "server_up", "server": 1}
+        ]}"#;
+        let offs = event_byte_offsets(text);
+        assert_eq!(offs.len(), 3);
+        for &o in &offs {
+            assert_eq!(text.as_bytes()[o], b'{');
+        }
+        assert!(text[offs[1]..].starts_with(r#"{"at_ms": 2000"#));
+        // Server 9 doesn't exist in a 4-server shape: the E001 must be
+        // anchored to event 1's byte offset in the source text.
+        let d = verify_script_text(text, &shape(), None);
+        assert!(d.has_code(Code::ServerIndex));
+        let rendered = d.render_text();
+        let want = format!("events[1] (byte {})", offs[1]);
+        assert!(rendered.contains(&want), "{rendered}");
+    }
+
+    #[test]
+    fn byte_offsets_survive_strings_with_brackets() {
+        let text = r#"{"name":"tricky ] } [","events":[{"at_ms":0,"type":"load_burst","rate_multiplier":2.0,"duration_ms":5.0}]}"#;
+        let offs = event_byte_offsets(text);
+        assert_eq!(offs.len(), 1);
+        assert!(text[offs[0]..].starts_with(r#"{"at_ms":0"#));
+    }
+
+    #[test]
+    fn unparseable_text_is_a_parse_error_diagnostic() {
+        let d = verify_script_text("{nope", &shape(), None);
+        assert!(d.has_code(Code::ParseError));
+        assert!(d.has_errors());
     }
 }

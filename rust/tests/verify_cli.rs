@@ -187,6 +187,61 @@ fn scenario_with_malformed_script_exits_with_e020() {
     assert!(stderr.contains("E020"), "stderr was: {stderr}");
 }
 
+/// The serve-side input gate: a script that verifies cleanly against the
+/// paper's 10-server world but references servers outside the serving
+/// config's 3-server world (2 edges + cloud) must be rejected before any
+/// thread spawns, with the E-code *and* the byte offset of the offending
+/// event in the source text.
+#[test]
+fn serve_rejects_out_of_world_scripts_with_byte_offsets() {
+    // (fixture, expected code, expect a byte offset in the rendering)
+    let cases = [
+        ("E001_serving_script_server.json", "E001", true),
+        ("E020_parse_error.json", "E020", false),
+    ];
+    for (file, code, wants_offset) in cases {
+        let path = fixture(file);
+        let out = run_cli(&["serve", "--synthetic", "--script", path.as_str()]);
+        assert_eq!(
+            out.status.code(),
+            Some(1),
+            "{file}: serve must refuse a bad script\nstdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(code), "{file}: stderr was: {stderr}");
+        if wants_offset {
+            assert!(stderr.contains("byte"), "{file}: no byte offset in: {stderr}");
+        }
+    }
+    // The same fixture is a *valid* script for the paper's world shape.
+    let d = verify_file(
+        &fixture("E001_serving_script_server.json"),
+        &VerifyOptions::default(),
+    );
+    assert!(!d.has_errors(), "fixture must be paper-world-clean:\n{}", d.render_text());
+
+    let out = run_cli(&["serve", "--synthetic", "--script", "/nonexistent/edgeus-nope.json"]);
+    assert_ne!(out.status.code(), Some(0));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("E019"), "stderr was: {stderr}");
+}
+
+#[test]
+fn serve_refuses_scenario_and_script_together() {
+    let path = fixture("E001_serving_script_server.json");
+    let out = run_cli(&[
+        "serve",
+        "--synthetic",
+        "--scenario",
+        "edge-failover",
+        "--script",
+        path.as_str(),
+    ]);
+    assert_ne!(out.status.code(), Some(0), "--scenario and --script are exclusive");
+}
+
 /// The property the verifier promises: anything it accepts simulates
 /// without conservation violations.
 #[test]

@@ -55,8 +55,13 @@ const ALLOC_TOKENS: [&str; 10] = [
 
 /// Files that must contain at least one no-alloc fence (the hot paths
 /// the throughput gate depends on).
-const FENCED_FILES: [&str; 4] =
-    ["sim/des.rs", "coordinator/gus.rs", "coordinator/rank_cache.rs", "model/instance.rs"];
+const FENCED_FILES: [&str; 5] = [
+    "sim/des.rs",
+    "coordinator/gus.rs",
+    "coordinator/rank_cache.rs",
+    "model/instance.rs",
+    "serving/mod.rs",
+];
 
 fn is_comment_line(line: &str) -> bool {
     line.trim_start().starts_with("//")
